@@ -1,0 +1,81 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run artifacts. Usage: PYTHONPATH=src python -m benchmarks.experiments_report"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, terms_from_artifact
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_all():
+    arts = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(p) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def dryrun_table(arts):
+    rows = ["| arch | shape | mesh | compile s | HLO flops/dev | "
+            "bytes/dev | collective B/dev | temp GB/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for a in sorted(arts, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        mem = a.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9
+        coll = a.get("collective_bytes", a.get("collective_bytes_raw", 0))
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a.get('compile_s', 0):.0f} "
+            f"| {a.get('flops', a.get('flops_raw', 0)):.3e} "
+            f"| {a.get('bytes_accessed', 0):.3e} "
+            f"| {coll:.3e} | {mem:.2f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(arts):
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | roofline frac | MODEL_FLOPS/HLO | accounting |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for a in sorted(arts, key=lambda x: (x["arch"], x["shape"])):
+        if a["mesh"] != "pod16x16":
+            continue
+        t = terms_from_artifact(a)
+        flops = a.get("flops", a.get("flops_raw", 0.0))
+        useful = a["model_flops"] / max(flops * a["n_devices"], 1e-30)
+        acct = "calibrated" if "calibration" in a else "raw(loop-once)"
+        rows.append(
+            f"| {a['arch']} | {a['shape']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {t['bottleneck']} "
+            f"| {t['roofline_frac']:.3f} | {useful:.3f} | {acct} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(arts):
+    """worst roofline fraction / most collective-bound / most paper-
+    representative (largest precision-knob surface = biggest MoE train)."""
+    singles = [a for a in arts if a["mesh"] == "pod16x16" and "flops" in a]
+    with_t = [(a, terms_from_artifact(a)) for a in singles]
+    worst = min(with_t, key=lambda at: at[1]["roofline_frac"])
+    coll = max(with_t, key=lambda at: at[1]["collective_s"]
+               / max(at[1]["compute_s"], 1e-30))
+    return worst[0], coll[0]
+
+
+def main():
+    arts = load_all()
+    print(f"## §Dry-run ({len(arts)} cells)\n")
+    print(dryrun_table(arts))
+    print("\n## §Roofline (single-pod 16x16)\n")
+    print(roofline_table(arts))
+    if any("flops" in a for a in arts):
+        w, c = pick_hillclimb(arts)
+        print(f"\nworst-fraction cell: {w['arch']} x {w['shape']}")
+        print(f"most collective-bound: {c['arch']} x {c['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks (CPU wall-time is indicative only; the real perf
+story for TPU is the §Roofline analysis from the compiled dry-run)."""
+from __future__ import annotations
+
+import timeit
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, n=10):
+    fn(*args).block_until_ready()
+    t = timeit.timeit(lambda: fn(*args).block_until_ready(), number=n) / n
+    return t * 1e6
+
+
+def run(full: bool = False):
+    from repro.kernels.chop import chop_op
+    from repro.precision import FORMAT_ID, chop
+
+    rows = []
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1 << 20).astype(np.float32))
+    fid = FORMAT_ID["bf16"]
+
+    jnp_chop = jax.jit(lambda v: chop(v, fid))
+    us = _time(jnp_chop, x)
+    rows.append(f"kernels/chop_jnp_1M_f32,{us:.0f},"
+                f"GBps={x.size * 8 / us / 1e3:.2f}")
+
+    us = _time(lambda v: chop_op(v, fid, interpret=True), x, n=3)
+    rows.append(f"kernels/chop_pallas_interp_1M_f32,{us:.0f},"
+                "note=interpret-mode;correctness-only")
+
+    from repro.kernels.qmatmul import qmatmul_ref
+    a = jnp.asarray(rng.standard_normal((512, 512)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((512, 512)).astype(np.float32))
+    ref = jax.jit(lambda p, q: qmatmul_ref(p, q, fid))
+    us = _time(ref, a, b)
+    flops = 2 * 512 ** 3
+    rows.append(f"kernels/qmatmul_ref_512,{us:.0f},"
+                f"GFLOPs={flops / us / 1e3:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,66 @@
+"""Emit the EXPERIMENTS.md §Perf addendum: baseline vs optimized roofline
+terms for the hillclimbed cells.
+
+Usage: PYTHONPATH=src python -m benchmarks.perf_addendum
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import terms_from_artifact
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def _load(reldir, name):
+    p = os.path.join(ROOT, reldir, name + "__pod16x16.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def row(tag, art):
+    if art is None:
+        return f"| {tag} | (pending) | | | | |"
+    t = terms_from_artifact(art)
+    mem = art.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9
+    return (f"| {tag} | {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.3f} | {t['bottleneck']} "
+            f"| {t['roofline_frac']:.3f} | {mem:.1f} |")
+
+
+CELLS = [
+    ("falcon-mamba-7b__train_4k", [
+        ("baseline (materialized scan states)", "dryrun"),
+        ("opt1: per-chunk scan states", "dryrun_opt"),
+        ("opt2: + bf16 param gathers", "dryrun_opt2"),
+    ]),
+    ("falcon-mamba-7b__prefill_32k", [
+        ("baseline (materialized scan states)", "dryrun"),
+        ("opt: per-chunk scan states (transfer)", "dryrun_opt"),
+    ]),
+    ("gemma-2b__train_4k", [
+        ("baseline (fp32 gathers, full SxS scores)", "dryrun"),
+        ("opt: bf16 gathers + 8-way q-chunked attention", "dryrun_opt"),
+    ]),
+    ("llama4-scout-17b-16e__train_4k", [
+        ("baseline (paper-faithful defaults)", "dryrun_calib"),
+        ("opt: bf16 gathers + q-chunked attention", "dryrun_opt"),
+    ]),
+]
+
+
+def main():
+    for cell, variants in CELLS:
+        print(f"\n### {cell}\n")
+        print("| variant | compute s | memory s | collective s | "
+              "bottleneck | roofline frac | temp GB/dev |")
+        print("|---|---|---|---|---|---|---|")
+        for tag, d in variants:
+            print(row(tag, _load(d, cell)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Roofline summary rows, read from launch/dryrun artifacts.
+
+The dry-run (src/repro/launch/dryrun.py) writes one JSON per
+(arch x shape x mesh) cell with HLO FLOPs / bytes / collective bytes;
+this module converts them to the three roofline terms
+(EXPERIMENTS.md §Roofline) and emits CSV rows."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "dryrun")
+
+# TPU v5e hardware constants (per chip), from the assignment.
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link
+
+
+def terms_from_artifact(art: dict) -> dict:
+    chips = art["n_devices"]
+    flops = art.get("flops", art.get("flops_raw", 0.0))
+    bytes_ = art.get("bytes_accessed", art.get("bytes_accessed_raw", 0.0))
+    coll = art.get("collective_bytes", art.get("collective_bytes_raw", 0.0))
+    per_device = art.get("cost_is_per_device", True)
+    scale = 1.0 if per_device else 1.0 / chips
+    t_c = flops * scale / PEAK_FLOPS
+    t_m = bytes_ * scale / HBM_BW
+    t_x = coll * scale / LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "bottleneck": dom[1],
+            "roofline_frac": t_c / max(t_c, t_m, t_x, 1e-30)}
+
+
+def run(full: bool = False):
+    rows = []
+    paths = sorted(glob.glob(os.path.join(ARTIFACTS, "*.json")))
+    if not paths:
+        return ["roofline/none,0,run `python -m repro.launch.dryrun` first"]
+    for p in paths:
+        with open(p) as f:
+            art = json.load(f)
+        if "flops" not in art:
+            continue
+        t = terms_from_artifact(art)
+        name = os.path.splitext(os.path.basename(p))[0]
+        rows.append(
+            f"roofline/{name},{max(t['compute_s'], t['memory_s'], t['collective_s']) * 1e6:.0f},"
+            f"compute_s={t['compute_s']:.4e};memory_s={t['memory_s']:.4e};"
+            f"collective_s={t['collective_s']:.4e};bottleneck={t['bottleneck']};"
+            f"frac={t['roofline_frac']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

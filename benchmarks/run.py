@@ -1,0 +1,69 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Sections:
+  table2  — dense randsvd (paper Table 2 + Fig. 2 usage distribution)
+  table6  — penalty ablation (paper Table 6 + Fig. 4); shares solve caches
+            with table2 via the env registry
+  table4  — sparse SPD (paper Tables 3/4/5)
+  kernels — chop / qmatmul microbenchmarks
+  roofline— summary rows from launch/dryrun artifacts, if present
+
+Flags: --full (paper-scale §5.1), --only <name>, --skip-solver.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+_PRINTED = 0
+
+
+def _flush(rows):
+    global _PRINTED
+    for r in rows[_PRINTED:]:
+        print(r, flush=True)
+    _PRINTED = len(rows)
+
+
+def main() -> None:
+    args = set(sys.argv[1:])
+    full = "--full" in args
+    only = None
+    if "--only" in sys.argv:
+        only = sys.argv[sys.argv.index("--only") + 1]
+    rows = ["name,us_per_call,derived"]
+    env_registry = {}
+
+    def want(name, solver=True):
+        if solver and "--skip-solver" in args:
+            return False
+        return only is None or only == name
+
+    _flush(rows)
+    if want("table2"):
+        from benchmarks import table2_dense
+        rows += table2_dense.run(full=full, env_registry=env_registry)
+        _flush(rows)
+    if want("table6"):
+        from benchmarks import table6_ablation
+        rows += table6_ablation.run(full=full, env_registry=env_registry)
+        _flush(rows)
+    if want("table4"):
+        from benchmarks import table4_sparse
+        rows += table4_sparse.run(full=full)
+        _flush(rows)
+    if want("kernels", solver=False):
+        from benchmarks import kernel_bench
+        rows += kernel_bench.run(full=full)
+        _flush(rows)
+    if want("roofline", solver=False):
+        from benchmarks import roofline
+        rows += roofline.run()
+        _flush(rows)
+
+
+if __name__ == "__main__":
+    main()

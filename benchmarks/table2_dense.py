@@ -1,0 +1,43 @@
+"""Paper Table 2: dense randsvd systems, tau in {1e-6, 1e-8}, W1/W2 + FP64
+baseline, metrics per condition range. Also emits Figure 2's per-range
+precision-usage distribution (the same evaluation pass produces both)."""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from benchmarks.common import (W1, W2, emit_csv_rows, get_scale,
+                               make_datasets, run_setting, save_report)
+
+
+def run(full: bool = False, taus=(1e-6, 1e-8), env_registry=None,
+        recompute: bool = False):
+    from benchmarks.common import load_report
+    cached = None if recompute else load_report("table2_dense")
+    if cached is not None:
+        rows = []
+        for tau_key, report in cached.items():
+            rows += emit_csv_rows(f"table2/{tau_key}", report)
+        return rows
+    scale = get_scale(full)
+    train, test = make_datasets("dense", scale)
+    rows = []
+    reports = {}
+    for tau in taus:
+        key = ("dense", tau)
+        prior = env_registry.get(key) if env_registry is not None else None
+        report, envs = run_setting(train, test, tau, {"W1": W1, "W2": W2},
+                                   scale, envs=prior)
+        if env_registry is not None:
+            env_registry[key] = envs
+        reports[f"tau={tau:g}"] = report
+        rows += emit_csv_rows(f"table2/tau={tau:g}", report)
+    save_report("table2_dense", reports)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    for r in run(full="--full" in sys.argv):
+        print(r)

@@ -1,0 +1,44 @@
+"""Batched serving example: prefill + cached greedy decode, with the
+KV-cache precision knob (bandit's serve-side action) demonstrated by
+comparing logit drift across cache formats.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.precision import FORMAT_ID
+from repro.serve import ServeConfig, generate
+
+
+def main():
+    cfg = get_smoke("gemma2-9b")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key, jnp.float32)
+    prompts = jax.random.randint(key, (8, 24), 0, cfg.vocab_size)
+
+    outs = {}
+    for fmt in [None, "bf16", "e4m3"]:
+        scfg = ServeConfig(max_new_tokens=24, compute_dtype=jnp.float32,
+                           cache_fmt=FORMAT_ID[fmt] if fmt else None)
+        t0 = time.time()
+        toks = np.asarray(generate(params, prompts, cfg, scfg, key))
+        dt = time.time() - t0
+        outs[fmt or "fp32-cache"] = toks
+        print(f"[serve] cache={fmt or 'fp32':10s} "
+              f"{8 * 24 / dt:7.1f} tok/s  sample={toks[0][:10]}")
+
+    ref = outs["fp32-cache"]
+    for fmt in ["bf16", "e4m3"]:
+        agree = float(np.mean(outs[fmt] == ref))
+        print(f"[serve] {fmt} KV cache token agreement vs fp32: "
+              f"{agree:.1%} (memory {'-50%' if fmt == 'bf16' else '-75%'})")
+
+
+if __name__ == "__main__":
+    main()

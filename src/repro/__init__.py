@@ -1,0 +1,19 @@
+"""repro: Precision autotuning for linear solvers via contextual-bandit RL
+(Carson & Chen, 2026) as a multi-pod JAX training/inference framework.
+
+Subpackages:
+  core         — the paper's contribution: bandit, action space, rewards,
+                 discretizer, GMRES-IR environment, train/evaluate
+  precision    — round-to-format emulation (runtime-switchable format ids)
+  solvers      — chopped LU / triangular / GMRES / GMRES-IR
+  kernels      — Pallas TPU kernels (chop, qmatmul, flash_attention)
+  models       — 10 assigned LM architectures (GQA/MLA/MoE/SSM/hybrid)
+  train, serve — optimizer, precision controller, decode loops
+  data         — problem generators + token pipeline
+  distributed  — FSDP x TP x EP x SP sharding rules
+  checkpoint   — atomic fault-tolerant checkpointing
+  launch       — production mesh, multi-pod dry-run, train/serve CLIs
+  configs      — ArchConfig registry (--arch <id>)
+"""
+
+__version__ = "0.1.0"

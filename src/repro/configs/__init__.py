@@ -1,0 +1,6 @@
+from .base import (ArchConfig, ShapeConfig, SHAPES, supports_long_context,
+                   valid_cells)
+from .registry import ARCHS, all_archs, get_arch, get_smoke
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "supports_long_context",
+           "valid_cells", "ARCHS", "all_archs", "get_arch", "get_smoke"]

@@ -1,0 +1,23 @@
+"""The paper's primary contribution: contextual-bandit precision autotuning.
+
+Exports the general framework (action space, discretizer, rewards, tabular
+bandit, policy) and the GMRES-IR instantiation (env + train/evaluate)."""
+from .action_space import (ActionSpace, full_action_space, is_monotone,
+                           reduced_action_space, reduced_size)
+from .autotune import (TrainConfig, TrainHistory, evaluate_fixed_action,
+                       evaluate_policy, train_policy)
+from .bandit import QTable, epsilon_schedule
+from .discretize import Discretizer
+from .env import GMRESIREnv, SolveRecord
+from .policy import PrecisionPolicy
+from .rewards import (RewardConfig, W1, W2, accuracy_term, penalty_term,
+                      precision_term, reward, reward_batch)
+
+__all__ = [
+    "ActionSpace", "full_action_space", "is_monotone",
+    "reduced_action_space", "reduced_size", "TrainConfig", "TrainHistory",
+    "evaluate_fixed_action", "evaluate_policy", "train_policy", "QTable",
+    "epsilon_schedule", "Discretizer", "GMRESIREnv", "SolveRecord",
+    "PrecisionPolicy", "RewardConfig", "W1", "W2", "accuracy_term",
+    "penalty_term", "precision_term", "reward", "reward_batch",
+]

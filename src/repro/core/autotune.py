@@ -1,0 +1,150 @@
+"""High-level training / evaluation API (paper Alg. 3).
+
+`train_policy` is an *exact* implementation of Algorithm 3 — sequential
+per-instance epsilon-greedy selection and Q-updates — with a predictive
+batching trick: at each episode start the epsilon coins and random actions
+are pre-drawn and the greedy actions under the episode-start Q are
+pre-solved, so nearly every reward lookup hits the solve cache while the
+update order/semantics stay exactly the paper's. Intra-episode Q changes
+that flip an argmax fall back to an on-demand solve (rare).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.action_space import ActionSpace
+from repro.core.bandit import QTable, epsilon_schedule
+from repro.core.discretize import Discretizer
+from repro.core.env import GMRESIREnv
+from repro.core.policy import PrecisionPolicy
+from repro.core.rewards import RewardConfig
+from repro.solvers.metrics import summarize
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    episodes: int = 100
+    alpha: Optional[float] = 0.5    # None => 1/N(s,a)
+    eps_min: float = 0.02
+    n_bins: Sequence[int] = (10, 10)
+    seed: int = 0
+    prefill: bool = False           # exhaustive (i,a) sweep before training
+
+
+@dataclasses.dataclass
+class TrainHistory:
+    episode_reward: List[float] = dataclasses.field(default_factory=list)
+    episode_rpe: List[float] = dataclasses.field(default_factory=list)
+    epsilon: List[float] = dataclasses.field(default_factory=list)
+    unique_solves: List[int] = dataclasses.field(default_factory=list)
+    wall_time_s: float = 0.0
+
+
+def train_policy(env: GMRESIREnv, reward_cfg: RewardConfig,
+                 cfg: TrainConfig = TrainConfig()) -> tuple:
+    """Algorithm 3 on the environment's training systems."""
+    t0 = time.time()
+    n_sys = len(env.systems)
+    disc = Discretizer.fit(env.features, cfg.n_bins)
+    states = np.asarray(disc(env.features))
+    qt = QTable(disc.n_states, env.action_space.n_actions, cfg.alpha,
+                cfg.seed)
+    rng = np.random.default_rng(cfg.seed + 1)
+    hist = TrainHistory()
+
+    if cfg.prefill:
+        env.prefill_all()
+
+    for t in range(cfg.episodes):
+        eps = epsilon_schedule(t, cfg.episodes, cfg.eps_min)
+        coins = rng.random(n_sys) < eps
+        rand_a = rng.integers(env.action_space.n_actions, size=n_sys)
+        # Predictive prefetch: random picks + episode-start greedy picks.
+        prefetch = [(i, int(rand_a[i])) for i in range(n_sys) if coins[i]]
+        prefetch += [(i, qt.greedy(int(states[i]))) for i in range(n_sys)
+                     if not coins[i]]
+        env.solve_pairs(prefetch)
+
+        ep_rewards, ep_rpes = [], []
+        for i in range(n_sys):                      # Alg. 3 lines 6-21
+            s = int(states[i])
+            a = int(rand_a[i]) if coins[i] else qt.greedy(s)
+            r = env.reward(i, a, reward_cfg)
+            rpe = qt.update(s, a, r)
+            ep_rewards.append(r)
+            ep_rpes.append(abs(rpe))
+        hist.episode_reward.append(float(np.mean(ep_rewards)))
+        hist.episode_rpe.append(float(np.mean(ep_rpes)))
+        hist.epsilon.append(eps)
+        hist.unique_solves.append(env.cache_size)
+
+    hist.wall_time_s = time.time() - t0
+    policy = PrecisionPolicy(env.action_space, disc, qt)
+    return policy, hist
+
+
+def evaluate_policy(policy: PrecisionPolicy, env: GMRESIREnv,
+                    tau_base: float) -> Dict:
+    """Greedy inference (Alg. 3 line 23) over the env's systems, summarized
+    per condition range (paper table columns)."""
+    n_sys = len(env.systems)
+    picks = []
+    for i in range(n_sys):
+        a, _ = policy.predict(env.features[i])
+        picks.append((i, a))
+    env.solve_pairs(picks)
+    recs = [env.record(i, a) for i, a in picks]
+    ferr = np.array([r.ferr for r in recs])
+    nbe = np.array([r.nbe for r in recs])
+    n_outer = np.array([r.n_outer for r in recs])
+    n_gmres = np.array([r.n_gmres for r in recs])
+    kappa = env.kappas
+    table = summarize(ferr, nbe, n_outer, n_gmres, kappa, tau_base)
+    # Per-step precision usage frequencies (paper Fig. 2 / Table 5).
+    usage = np.zeros((len(policy.action_space.ladder),))
+    per_range_usage = {}
+    names = list(policy.action_space.ladder)
+    lad = policy.action_space.ladder_idx
+    for rng_name, (lo, hi) in {
+            "low": (1e0, 1e3), "medium": (1e3, 1e6),
+            "high": (1e6, 1e9), "vhigh": (1e9, 1e12)}.items():
+        sel = [(i, a) for (i, a) in picks if lo <= kappa[i] < hi]
+        if not sel:
+            continue
+        counts = np.zeros(len(names))
+        for _, a in sel:
+            for step in lad[a]:
+                counts[step] += 1
+        per_range_usage[rng_name] = dict(
+            zip(names, (counts / len(sel)).round(3).tolist()))
+    for _, a in picks:
+        for step in lad[a]:
+            usage[step] += 1
+    return {
+        "table": table,
+        "actions": picks,
+        "ferr": ferr, "nbe": nbe,
+        "n_outer": n_outer, "n_gmres": n_gmres,
+        "usage_per_solve": dict(zip(names, (usage / n_sys).round(3).tolist())),
+        "usage_per_range": per_range_usage,
+    }
+
+
+def evaluate_fixed_action(env: GMRESIREnv, action_idx: int,
+                          tau_base: float) -> Dict:
+    """Baseline evaluation (e.g. the all-FP64 action)."""
+    picks = [(i, action_idx) for i in range(len(env.systems))]
+    env.solve_pairs(picks)
+    recs = [env.record(i, a) for i, a in picks]
+    ferr = np.array([r.ferr for r in recs])
+    nbe = np.array([r.nbe for r in recs])
+    n_outer = np.array([r.n_outer for r in recs])
+    n_gmres = np.array([r.n_gmres for r in recs])
+    return {"table": summarize(ferr, nbe, n_outer, n_gmres, env.kappas,
+                               tau_base),
+            "ferr": ferr, "nbe": nbe, "n_outer": n_outer,
+            "n_gmres": n_gmres}

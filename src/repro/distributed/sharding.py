@@ -1,0 +1,196 @@
+"""Sharding rules: parameter/optimizer/input/cache PartitionSpecs.
+
+Uniform strategy (DESIGN.md §5): tensor-parallel on the "model" axis
+(attention heads, FFN hidden, MoE experts, vocab) x ZeRO-3-style FSDP on
+the data axes (("pod", "data") when multi-pod) on each parameter's
+non-TP dimension; batch over the data axes; sequence-parallel residual
+stream (S over "model") between scan groups.
+
+Rules are name-based over the parameter tree paths and divisibility-checked:
+an axis that does not divide a dimension is dropped (GSPMD could pad, but
+predictable layouts beat padded ones at this scale).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(dim: int, axes, mesh: Mesh):
+    """Return axes if they divide dim (and dim is nontrivial), else None."""
+    if axes is None or dim <= 1:
+        return None
+    size = axes_size(mesh, axes)
+    if size > 1 and dim % size == 0:
+        return axes
+    return None
+
+
+# (regex on the leaf path, role per trailing dimension)
+# roles: "fsdp", "model", None; applied to the LAST len(roles) dims.
+_PARAM_RULES = [
+    (r"embedding$", ("model", "fsdp")),
+    (r"unembed$", ("fsdp", "model")),
+    # MoE expert banks (E, d, f) / (E, f, d): expert-parallel on model.
+    (r"ffn/(wi_gate|wi_up)$/3d", ("model", "fsdp", None)),
+    (r"ffn/wo$/3d", ("model", None, "fsdp")),
+    (r"router$", ("fsdp", None)),
+    # Dense FFN (d, f) / (f, d).
+    (r"(wi_gate|wi_up)$", ("fsdp", "model")),
+    (r"ffn/wo$", ("model", "fsdp")),
+    (r"shared/wo$", ("model", "fsdp")),
+    # Attention.
+    (r"(wq|wk|wv)$", ("fsdp", "model")),
+    (r"mixer/wo$", ("model", "fsdp")),
+    # MLA.
+    (r"w_dkv$", ("fsdp", None)),
+    (r"w_kr$", ("fsdp", None)),
+    (r"w_dq$", ("fsdp", None)),
+    (r"(w_uk|w_uv|w_uq)$", (None, "model", None)),
+    # Mamba.
+    (r"in_proj$", ("fsdp", "model")),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$", ("model",)),
+    (r"x_proj$", ("model", None)),
+    (r"dt_proj$", (None, "model")),
+    (r"dt_bias$", ("model",)),
+    (r"A_log$", ("model", None)),
+    (r"D$", ("model",)),
+    (r"out_proj$", ("model", "fsdp")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(f"[{k.idx}]")
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+    return "/".join(parts)
+
+
+def spec_for_param(path_str: str, shape: Tuple[int, ...],
+                   mesh: Mesh) -> P:
+    fsdp = data_axes(mesh) or None
+    ndim = len(shape)
+    # QTensor leaves: codes share the param's shape; scales share its rank.
+    core = re.sub(r"/(codes|scales)$", "", path_str)
+    # Scan-stacked layer params carry a leading group dim (never sharded).
+    stacked = core.startswith("layers") or "/layers/" in core
+    base_ndim = ndim - (1 if stacked else 0)
+    for pat, roles in _PARAM_RULES:
+        want3d = pat.endswith("/3d")
+        pat_core = pat[:-3] if want3d else pat
+        if not re.search(pat_core, core):
+            continue
+        # 3d rules target MoE expert banks (E, d, f); dense FFN leaves with
+        # the same names have base rank 2 and fall through to the 2d rule.
+        if want3d and base_ndim != 3:
+            continue
+        nr = len(roles)
+        if ndim < nr:
+            continue
+        entries = [None] * (ndim - nr)
+        for dim, role in zip(shape[ndim - nr:], roles):
+            ax = {"fsdp": fsdp, "model": "model", None: None}[role]
+            entries.append(_fit(dim, ax, mesh))
+        return P(*entries)
+    return P()  # replicate (norms, scalars, step counters)
+
+
+def param_specs(params_shapes, mesh: Mesh):
+    """PartitionSpec tree mirroring a params/opt-state shape tree."""
+    def leaf_spec(path, leaf):
+        return spec_for_param(_path_str(path), leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shapes)
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch + cache specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """(B, S, ...) host batch: B over the data axes when divisible."""
+    dp = data_axes(mesh) or None
+    first = _fit(shape[0], dp, mesh)
+    return P(first, *([None] * (len(shape) - 1)))
+
+
+def batch_specs(batch_shapes, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda l: batch_spec(l.shape, mesh), batch_shapes)
+
+
+def cache_spec(path_str: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    dp = data_axes(mesh) or None
+    if path_str.endswith("length") or len(shape) <= 1:
+        return P()
+    b_ax = _fit(shape[0], dp, mesh)
+    if re.search(r"/(k|v)$", path_str) and len(shape) == 4:
+        b, s, h, d = shape
+        h_ax = _fit(h, "model", mesh)
+        s_ax = None
+        if b_ax is None:                 # long-context: shard sequence
+            s_ax = _fit(s, dp, mesh)
+        if h_ax is None and s_ax is None:
+            s_ax = _fit(s, "model", mesh)
+        elif h_ax is None:
+            h_ax = None
+        return P(b_ax, s_ax, h_ax, None)
+    if re.search(r"/ckv$|/k_rope$", path_str) and len(shape) == 3:
+        b, s, r = shape
+        s_ax = _fit(s, dp, mesh) if b_ax is None else None
+        return P(b_ax, s_ax, None)
+    if re.search(r"/h$", path_str) and len(shape) == 3:   # mamba state
+        b, di, ds = shape
+        return P(b_ax, _fit(di, "model", mesh), None)
+    if re.search(r"/conv$", path_str) and len(shape) == 3:
+        b, k, di = shape
+        return P(b_ax, None, _fit(di, "model", mesh))
+    # stacked (group, ...) cache entries: recurse on trailing dims
+    if len(shape) >= 2:
+        inner = cache_spec(path_str, shape[1:], mesh)
+        return P(None, *inner)
+    return P()
+
+
+def cache_specs(cache_shapes, mesh: Mesh):
+    def leaf(path, l):
+        ps = _path_str(path)
+        # Stacked scan caches carry a leading group dim.
+        if ps.startswith("layers"):
+            inner = cache_spec(ps, l.shape[1:], mesh)
+            return P(None, *inner)
+        return cache_spec(ps, l.shape, mesh)
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+def residual_spec(mesh: Mesh) -> P:
+    """Sequence-parallel residual stream between scan groups (B, S, d)."""
+    dp = data_axes(mesh) or None
+    return P(dp, "model", None)

@@ -1,0 +1,4 @@
+from .ops import chop_op, make_fmt_params
+from .ref import chop_ref
+
+__all__ = ["chop_op", "chop_ref", "make_fmt_params"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for kernels/chop.
+
+The reference is repro.precision.chop (itself validated bit-for-bit against
+an exact Fraction-arithmetic oracle in tests/test_precision.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.precision import chop as _chop
+
+
+def chop_ref(x: jnp.ndarray, fmt_id) -> jnp.ndarray:
+    return _chop(x, fmt_id)

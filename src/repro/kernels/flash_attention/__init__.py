@@ -1,0 +1,4 @@
+from .ops import flash_attention_op
+from .ref import flash_ref
+
+__all__ = ["flash_attention_op", "flash_ref"]

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention forward.
+
+Covers the attention flavors in the assigned archs: causal global, sliding
+window (gemma2), chunked (llama4), attention-logit softcap (gemma2), GQA
+head grouping — selected by runtime SMEM parameters, so one compiled kernel
+serves all layer kinds.
+
+Grid: (B*H, Sq/bq, Sk/bk), k-dim innermost; the (m, l, acc) online-softmax
+state lives in VMEM scratch that persists across the sequential k-steps
+(canonical TPU flash pattern). Fully-masked k-blocks (beyond the causal
+frontier / outside the window or chunk) are skipped with pl.when — the same
+block-sparsity the roofline credits for sub-quadratic attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _flash_kernel(iparams_ref, fparams_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, bq, bk, nk):
+    """iparams: int32[3] = [kind, window, chunk] (kind: 0 global, 1 local,
+    2 chunked); fparams: f32[2] = [scale, softcap (0 = off)]."""
+    kind = iparams_ref[0]
+    window = iparams_ref[1]
+    chunk = iparams_ref[2]
+    scale = fparams_ref[0]
+    cap = fparams_ref[1]
+
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # Block-level skip: causal frontier and window/chunk left edges.
+    q_lo, q_hi = qb * bq, qb * bq + bq - 1
+    k_lo = kb * bk
+    live = k_lo <= q_hi                                  # causal
+    live &= jnp.where(kind == 1, k_lo + bk - 1 > q_lo - window, True)
+    live &= jnp.where(kind == 2, k_lo + bk - 1 >= (q_lo // chunk) * chunk,
+                      True)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(cap > 0, cap * jnp.tanh(s / jnp.maximum(cap, 1e-6)),
+                      s)
+        mask = q_pos >= k_pos
+        mask &= jnp.where(kind == 1, (q_pos - k_pos) < window, True)
+        mask &= jnp.where(kind == 2, (q_pos // chunk) == (k_pos // chunk),
+                          True)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _emit():
+        l = l_scr[...]
+        safe = jnp.where(l == 0, 1.0, l)
+        o_ref[...] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           iparams: jnp.ndarray, fparams: jnp.ndarray, *,
+                           groups: int = 1, bq: int = DEFAULT_BQ,
+                           bk: int = DEFAULT_BK,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (BH, Sq, D); k/v: (BHkv, Sk, D) with BH = BHkv * groups.
+    Sq % bq == 0 and Sk % bk == 0 (ops.py pads)."""
+    bh, sq, d = q.shape
+    bhkv, sk, _ = k.shape
+    assert bh == bhkv * groups and sq % bq == 0 and sk % bk == 0
+    nq, nk = sq // bq, sk // bk
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((None, bk, d), lambda h, i, j, g=groups: (h // g, j, 0)),
+            pl.BlockSpec((None, bk, d), lambda h, i, j, g=groups: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(iparams, fparams, q, k, v)

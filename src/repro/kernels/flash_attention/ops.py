@@ -1,0 +1,35 @@
+"""Jitted public wrapper: (B, S, H, D) model layout -> flash kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .flash import DEFAULT_BK, DEFAULT_BQ, flash_attention_pallas
+
+_KIND = {"attn": 0, "local": 1, "chunked": 2}
+
+
+def flash_attention_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                       kind: str = "attn", window: int = 0, chunk: int = 0,
+                       softcap: float = 0.0, scale: float | None = None,
+                       bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) -> (B, Sq, Hq, D)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    groups = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    bq_ = min(bq, sq)
+    bk_ = min(bk, sk)
+    assert sq % bq_ == 0 and sk % bk_ == 0, "pad sequence to block multiple"
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    iparams = jnp.asarray([_KIND[kind], window or 0, chunk or 0], jnp.int32)
+    fparams = jnp.asarray([scale, softcap], jnp.float32)
+    o = flash_attention_pallas(qf, kf, vf, iparams, fparams, groups=groups,
+                               bq=bq_, bk=bk_, interpret=interpret)
+    return o.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

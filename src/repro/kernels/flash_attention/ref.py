@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for kernels/flash_attention: masked softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              kind: str = "attn", window: int = 0, chunk: int = 0,
+              scale: float | None = None, softcap: float = 0.0,
+              groups: int = 1) -> jnp.ndarray:
+    """q: (BH, Sq, D); k/v: (BHkv, Sk, D). Causal, optional window/chunk."""
+    bh, sq, d = q.shape
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    k = jnp.repeat(k, groups, axis=0)
+    v = jnp.repeat(v, groups, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    mask = qp >= kp
+    if kind == "local" and window:
+        mask &= (qp - kp) < window
+    if kind == "chunked" and chunk:
+        mask &= (qp // chunk) == (kp // chunk)
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,5 @@
+from .ops import make_fmt_params, qmatmul_op
+from .ref import qmatmul_ref, qmatmul_ref_blocked
+
+__all__ = ["qmatmul_op", "qmatmul_ref", "qmatmul_ref_blocked",
+           "make_fmt_params"]

@@ -1,0 +1,44 @@
+"""Jitted public wrapper for qmatmul: padding + format-id -> SMEM params."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.chop.ops import _FMT_PACKED
+
+from .qmatmul import DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, qmatmul_pallas
+
+
+def make_fmt_params(fmt_id, chop_out: bool = True) -> jnp.ndarray:
+    """int32[5] = [t, emin, xmax_bits, saturate, chop_out]."""
+    row = jnp.asarray(_FMT_PACKED)[jnp.asarray(fmt_id, jnp.int32)]
+    return jnp.concatenate(
+        [row, jnp.asarray([1 if chop_out else 0], jnp.int32)])
+
+
+def _pad_to(x, m0, m1):
+    p0 = -x.shape[0] % m0
+    p1 = -x.shape[1] % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def qmatmul_op(a: jnp.ndarray, b: jnp.ndarray, fmt_id, *,
+               chop_out: bool = True, bm: int | None = None,
+               bn: int | None = None, bk: int | None = None,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Mixed-precision-emulated matmul for arbitrary (M,K)x(K,N) f32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    M, K = a.shape
+    _, N = b.shape
+    bm = min(bm or DEFAULT_BM, max(8, 1 << int(np.ceil(np.log2(max(M, 1))))))
+    bn = min(bn or DEFAULT_BN, max(128, 1 << int(np.ceil(np.log2(max(N, 1))))))
+    bk = min(bk or DEFAULT_BK, max(128, 1 << int(np.ceil(np.log2(max(K, 1))))))
+    ap = _pad_to(a.astype(jnp.float32), bm, bk)
+    bp = _pad_to(b.astype(jnp.float32), bk, bn)
+    out = qmatmul_pallas(ap, bp, make_fmt_params(fmt_id, chop_out),
+                         bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:M, :N]

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: format-emulated matmul (the paper's "run step i in
+precision u_i", fused).
+
+The autotuner's chosen precision is enforced by rounding both operands to
+the selected format *inside the MXU tile loop* (VMEM-resident), accumulating
+in fp32 — the semantics of real mixed-precision GEMM hardware (bf16 x bf16
+-> f32 MXU) generalized to any emulated format, without the two extra HBM
+round trips a standalone chop pass would cost.
+
+Grid (M/bm, N/bn, K/bk) with K innermost; fp32 VMEM scratch accumulator;
+optional output rounding (for "store in format u" steps).
+
+Format parameters live in SMEM as runtime data: one compiled kernel serves
+every precision action (DESIGN.md §3.4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.precision.chop import _chop_core
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 256
+
+
+def _qmatmul_kernel(fmt_ref, a_ref, b_ref, o_ref, acc_ref):
+    """fmt_ref (SMEM): int32[5] = [t, emin, xmax_bits, saturate, chop_out]."""
+    t = fmt_ref[0]
+    emin = fmt_ref[1]
+    xmax_bits = fmt_ref[2].astype(jnp.uint32)
+    saturate = fmt_ref[3] != 0
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _chop_core(a_ref[...], t, emin, 0, xmax_bits, saturate)
+    b = _chop_core(b_ref[...], t, emin, 0, xmax_bits, saturate)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _emit():
+        acc = acc_ref[...]
+        chopped = _chop_core(acc, t, emin, 0, xmax_bits, saturate)
+        o_ref[...] = jnp.where(fmt_ref[4] != 0, chopped, acc)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def qmatmul_pallas(a: jnp.ndarray, b: jnp.ndarray, fmt_params: jnp.ndarray,
+                   *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                   bk: int = DEFAULT_BK,
+                   interpret: bool = True) -> jnp.ndarray:
+    """a: (M, K) f32, b: (K, N) f32 — M/N/K padded to block multiples by
+    ops.qmatmul_op. fmt_params: int32[5]."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2 and M % bm == 0 and N % bn == 0 and K % bk == 0
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        _qmatmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(fmt_params, a, b)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for kernels/qmatmul: chop inputs, f32-accumulate matmul,
+optionally chop the output — identical semantics to the fused kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.precision import chop
+
+
+def qmatmul_ref(a: jnp.ndarray, b: jnp.ndarray, fmt_id,
+                chop_out: bool = True) -> jnp.ndarray:
+    a32 = chop(a.astype(jnp.float32), fmt_id)
+    b32 = chop(b.astype(jnp.float32), fmt_id)
+    out = jnp.dot(a32, b32, preferred_element_type=jnp.float32)
+    if chop_out:
+        out = chop(out, fmt_id)
+    return out
+
+
+def qmatmul_ref_blocked(a: jnp.ndarray, b: jnp.ndarray, fmt_id, bk: int,
+                        chop_out: bool = True) -> jnp.ndarray:
+    """Bit-exact oracle for the kernel's K-blocked accumulation order:
+    f32 partial dot per K-block, summed sequentially."""
+    K = a.shape[1]
+    assert K % bk == 0
+    a32 = chop(a.astype(jnp.float32), fmt_id)
+    b32 = chop(b.astype(jnp.float32), fmt_id)
+    acc = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+    for k0 in range(0, K, bk):
+        acc = acc + jnp.dot(a32[:, k0:k0 + bk], b32[k0:k0 + bk, :],
+                            preferred_element_type=jnp.float32)
+    if chop_out:
+        acc = chop(acc, fmt_id)
+    return acc

@@ -1,0 +1,357 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real step function (train_step with AdamW for
+train shapes; forward for prefill; cached decode_step for decode shapes),
+shards it over the production mesh, lowers and compiles it, and records:
+
+  * memory_analysis()  — per-device bytes (proves it fits)
+  * cost_analysis()    — HLO FLOPs / bytes for the §Roofline terms
+  * collective bytes   — parsed from the post-SPMD HLO (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute operand
+    sizes; not in cost_analysis)
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json, consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, all_archs, get_arch, valid_cells
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding import (batch_specs, cache_specs, named,
+                                        param_specs, residual_spec)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import decode_input_specs, train_batch_specs
+from repro.models import decode_step, forward, init_params
+from repro.train import AdamWConfig, TrainStepConfig, make_train_step
+from repro.train.optimizer import adamw_init
+from repro.train.train_step import TrainState
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+                "s64": 8, "u64": 8, "pred": 1, "s16": 2, "u16": 2, "c64": 8}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output sizes of collective ops in the (post-SPMD, per-device)
+    HLO. Returns (total_bytes, by_type, counts)."""
+    by_type, counts = {}, {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes_blob, op = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(shapes_blob):
+            dt, dims = sm.group(1), sm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        by_type[op] = by_type.get(op, 0) + nbytes
+        counts[op] = counts.get(op, 0) + 1
+    return sum(by_type.values()), by_type, counts
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def _opt_cfg(cfg: ArchConfig) -> AdamWConfig:
+    # int8 moments for the >=50B archs (fits HBM at 512 chips, DESIGN §5).
+    quant = cfg.params_total() > 5e10
+    return AdamWConfig(quantize_moments=quant)
+
+
+# §Perf hillclimb switches (set by --qchunks / --cast-bf16; defaults are the
+# paper-faithful-baseline execution).
+OPT = {"cast_bf16": False}
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """Returns (fn, example_args, in_shardings, out_shardings)."""
+    rs = NamedSharding(mesh, residual_spec(mesh))
+    if shape.kind == "train":
+        tcfg = TrainStepConfig(opt=_opt_cfg(cfg),
+                               compute_dtype=jnp.bfloat16,
+                               cast_params_for_compute=OPT["cast_bf16"])
+        step = make_train_step(cfg, tcfg, residual_sharding=rs)
+        key = jax.random.PRNGKey(0)
+        state_shapes = jax.eval_shape(
+            lambda k: TrainState(
+                init_params(cfg, k, jnp.float32),
+                adamw_init(jax.eval_shape(
+                    lambda kk: init_params(cfg, kk, jnp.float32), k),
+                    tcfg.opt),
+                jnp.zeros((), jnp.int32)), key)
+        batch_shapes = train_batch_specs(cfg, shape)
+        state_sh = named(param_specs(state_shapes, mesh), mesh)
+        batch_sh = named(batch_specs(batch_shapes, mesh), mesh)
+        return (step, (state_shapes, batch_shapes),
+                (state_sh, batch_sh), (state_sh, None))
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return forward(params, batch["tokens"], cfg, jnp.bfloat16,
+                           prefix_embeds=batch.get("prefix_embeds"),
+                           residual_sharding=rs)
+        key = jax.random.PRNGKey(0)
+        params_shapes = jax.eval_shape(
+            lambda k: init_params(cfg, k, jnp.bfloat16), key)
+        batch_shapes = train_batch_specs(cfg, shape)
+        batch_shapes.pop("loss_mask")
+        p_sh = named(param_specs(params_shapes, mesh), mesh)
+        b_sh = named(batch_specs(batch_shapes, mesh), mesh)
+        out_sh = NamedSharding(mesh, batch_specs(
+            {"o": jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len, cfg.vocab_size),
+                jnp.float32)}, mesh)["o"])
+        return prefill_fn, (params_shapes, batch_shapes), (p_sh, b_sh), \
+            out_sh
+    # decode
+    def serve_fn(params, token, caches):
+        return decode_step(params, token, caches, cfg, jnp.bfloat16)
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k, jnp.bfloat16), key)
+    token_shapes, caches_shapes = decode_input_specs(cfg, shape)
+    p_sh = named(param_specs(params_shapes, mesh), mesh)
+    t_sh = NamedSharding(mesh, batch_specs(
+        {"t": token_shapes}, mesh)["t"])
+    c_sh = named(cache_specs(caches_shapes, mesh), mesh)
+    return (serve_fn, (params_shapes, token_shapes, caches_shapes),
+            (p_sh, t_sh, c_sh), (None, c_sh))
+
+
+def _truncated(cfg: ArchConfig, k_groups: int) -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        cfg, n_layers=cfg.first_dense + k_groups * cfg.pattern_len)
+
+
+def _cost_numbers(cfg, shape, mesh):
+    """flops / bytes / collective stats for one compile of `cfg`."""
+    fn, args, in_sh, out_sh = build_cell(cfg, shape, mesh)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh,
+                           out_shardings=out_sh).lower(*args).compile()
+        cost = compiled.cost_analysis()
+        total, by_type, counts = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(total),
+        "coll_by_type": by_type,
+    }
+
+
+def calibrate_costs(cfg: ArchConfig, shape: ShapeConfig, mesh) -> dict:
+    """Exact per-device cost extrapolation.
+
+    XLA's cost analysis counts a while-loop body ONCE (not trip-count
+    times), so the scanned layer stack is undercounted. We compile the same
+    cell at 1 and 2 layer-groups — depths at which the model UNROLLS the
+    stack (models.transformer._scan_groups) — and extrapolate:
+        per_group = cost(2) - cost(1);  total = cost(1) + (G-1)*per_group.
+    This is exact for the layer stack (groups are identical) and keeps the
+    non-layer parts (embedding, loss, optimizer) from the k=1 compile."""
+    a1 = _cost_numbers(_truncated(cfg, 1), shape, mesh)
+    a2 = _cost_numbers(_truncated(cfg, 2), shape, mesh)
+    n_groups = (cfg.n_layers - cfg.first_dense) // cfg.pattern_len
+
+    def extra(key):
+        per = max(a2[key] - a1[key], 0.0)
+        return a1[key] + (n_groups - 1) * per, per
+
+    flops, flops_per_group = extra("flops")
+    byts, _ = extra("bytes")
+    coll, _ = extra("coll")
+    by_type = {}
+    for op in set(a1["coll_by_type"]) | set(a2["coll_by_type"]):
+        v1 = a1["coll_by_type"].get(op, 0)
+        v2 = a2["coll_by_type"].get(op, 0)
+        by_type[op] = v1 + (n_groups - 1) * max(v2 - v1, 0)
+    return {
+        "flops": flops, "bytes_accessed": byts, "collective_bytes": coll,
+        "collective_by_type": by_type, "n_groups": n_groups,
+        "flops_per_group": flops_per_group,
+        "calib_k1": a1, "calib_k2": a2,
+    }
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6*N_active*D for train; 2*N_active per generated token for decode."""
+    n = cfg.params_active()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # one token per sequence
+
+
+def dryrun_cell(arch_name: str, shape_name: str, multi_pod: bool,
+                out_dir: str = ART_DIR, verbose: bool = True,
+                calibrate: bool = True) -> dict:
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    fn, args, in_sh, out_sh = build_cell(cfg, shape, mesh)
+    art = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": int(np.prod([mesh.shape[a] for a in mesh.axis_names])),
+        "kind": shape.kind,
+        "params_total": cfg.params_total(),
+        "params_active": cfg.params_active(),
+        "model_flops": model_flops(cfg, shape),
+    }
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+        art["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        art["compile_s"] = round(time.time() - t1, 1)
+        try:
+            mem = compiled.memory_analysis()
+            print(mem)
+            art["memory"] = _mem_dict(mem)
+        except Exception as e:                    # pragma: no cover
+            art["memory"] = {"error": str(e)}
+        try:
+            cost = compiled.cost_analysis()
+            print({k: v for k, v in cost.items()
+                   if k in ("flops", "bytes accessed")})
+            art["flops"] = float(cost.get("flops", 0.0))
+            art["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+            art["cost_raw"] = {k: float(v) for k, v in cost.items()
+                               if isinstance(v, (int, float))
+                               and np.isfinite(v)}
+        except Exception as e:                    # pragma: no cover
+            art["cost_error"] = str(e)
+        text = compiled.as_text()
+        total, by_type, counts = collective_bytes(text)
+        art["collective_bytes_raw"] = total       # loop bodies counted once
+        art["collective_counts_raw"] = counts
+        art["cost_is_per_device"] = True          # post-SPMD module
+    # Exact extrapolated costs via truncated-depth calibration (single-pod
+    # roofline table; the multi-pod pass proves compile/sharding only).
+    if calibrate:
+        t2 = time.time()
+        calib = calibrate_costs(cfg, shape, mesh)
+        art["calibrate_s"] = round(time.time() - t2, 1)
+        art["flops_raw"] = art.get("flops", 0.0)
+        art["bytes_accessed_raw"] = art.get("bytes_accessed", 0.0)
+        art["flops"] = calib["flops"]
+        art["bytes_accessed"] = calib["bytes_accessed"]
+        art["collective_bytes"] = calib["collective_bytes"]
+        art["collective_by_type"] = calib["collective_by_type"]
+        art["n_groups"] = calib["n_groups"]
+        art["calibration"] = {k: calib[k] for k in
+                              ("calib_k1", "calib_k2", "flops_per_group")}
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir,
+                        f"{arch_name}__{shape_name}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1)
+    if verbose:
+        coll = art.get("collective_bytes", art.get("collective_bytes_raw",
+                                                   0))
+        print(f"[dryrun] {arch_name} x {shape_name} x {mesh_name}: "
+              f"lower {art['lower_s']}s compile {art['compile_s']}s "
+              f"flops={art.get('flops', 0):.3e} coll={coll:.3e}B -> {path}")
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--out", default=ART_DIR)
+    ap.add_argument("--qchunks", type=int, default=0,
+                    help="query-chunked attention (memory lever)")
+    ap.add_argument("--cast-bf16", action="store_true",
+                    help="bf16 param gathers (collective lever)")
+    args = ap.parse_args()
+
+    if args.qchunks:
+        from repro.models import attention
+        attention.QCHUNKS = args.qchunks
+    OPT["cast_bf16"] = bool(args.cast_bf16)
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    cells = []
+    if args.all:
+        # Smallest-first: most cells land early on a 1-core host.
+        for name, cfg in sorted(all_archs().items(),
+                                key=lambda kv: kv[1].params_total()):
+            for shp in valid_cells(cfg):
+                cells.append((name, shp.name))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shp in cells:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            path = os.path.join(args.out, f"{arch}__{shp}__{mesh_name}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[dryrun] skip existing {path}")
+                continue
+            try:
+                # Calibration only matters for the single-pod roofline.
+                dryrun_cell(arch, shp, mp, args.out,
+                            calibrate=not (args.no_calibrate or mp))
+            except Exception:
+                traceback.print_exc()
+                failures.append((arch, shp, mesh_name))
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete:", len(cells) * len(meshes), "cells")
+
+
+if __name__ == "__main__":
+    main()

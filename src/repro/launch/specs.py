@@ -1,0 +1,45 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run §2).
+
+Weak-type-correct, shardable, no device allocation. For train/prefill the
+inputs are token batches (+ the modality-stub embeddings); decode shapes
+carry a single new token plus the KV/latent/SSM caches at seq_len fill."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import init_caches
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, s), jnp.int32),
+             "loss_mask": sds((b, s), jnp.float32)}
+    if cfg.frontend == "vision_stub":
+        batch["prefix_embeds"] = sds((b, cfg.n_prefix_embeds, cfg.d_model),
+                                     jnp.bfloat16)
+    return batch
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                       cache_dtype=jnp.bfloat16):
+    b, s_max = shape.global_batch, shape.seq_len
+    token = sds((b, 1), jnp.int32)
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, b, s_max, cache_dtype))
+    return token, caches
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Assignment-facing entry: all inputs for the cell's step function."""
+    if shape.kind in ("train", "prefill"):
+        return {"batch": train_batch_specs(cfg, shape)}
+    token, caches = decode_input_specs(cfg, shape)
+    return {"token": token, "caches": caches}

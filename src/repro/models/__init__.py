@@ -1,0 +1,4 @@
+from .transformer import (decode_step, forward, init_caches, init_params,
+                          loss_fn)
+
+__all__ = ["decode_step", "forward", "init_caches", "init_params", "loss_fn"]

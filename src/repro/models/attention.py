@@ -1,0 +1,284 @@
+"""Attention variants: GQA/MQA (global, windowed, chunked), and MLA.
+
+Prefill/train paths use masked einsum attention (XLA-SPMD friendly; the
+Pallas flash kernel in kernels/flash_attention is the TPU drop-in).
+Decode paths attend against a KV cache; MLA decode uses the absorbed-matrix
+formulation (scores in the latent space — this is what makes 500k-token MLA
+caches feasible, and is one of the §Perf hillclimb levers).
+"""
+from __future__ import annotations
+
+import os
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+from .layers import apply_rope, dot, init_dense, rms_norm, rope_freqs, softcap
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+def attn_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, kind: str,
+              window: int = 0, chunk: int = 0) -> jnp.ndarray:
+    """(..., S_q, S_k) additive-mask boolean: True = attend."""
+    causal = q_pos[..., :, None] >= k_pos[..., None, :]
+    if kind == "local" and window:
+        causal &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    if kind == "chunked" and chunk:
+        causal &= (q_pos[..., :, None] // chunk) == \
+                  (k_pos[..., None, :] // chunk)
+    return causal
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ArchConfig, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(k1, d, hq * hd, dtype),
+        "wk": init_dense(k2, d, hkv * hd, dtype),
+        "wv": init_dense(k3, d, hkv * hd, dtype),
+        "wo": init_dense(k4, hq * hd, d, dtype),
+    }
+
+
+# Query-chunked attention (memory-term lever, §Perf): >0 splits the query
+# axis into this many python-unrolled, rematerialized chunks so the (Sq, Sk)
+# score tensor never exceeds (Sq/n, Sk). Unrolled (not lax.scan) so HLO
+# flop/byte accounting stays exact for the dry-run. 0 = single-shot einsum.
+QCHUNKS = int(os.environ.get("REPRO_ATTN_QCHUNKS", "0"))
+
+
+def _sdpa_full(q, k, v, mask, scale, attn_cap):
+    """q: (B,Sq,Hq,D) k/v: (B,Sk,Hkv,D); grouped heads."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q = q.reshape(b, sq, hkv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, attn_cap)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32).astype(v.dtype)
+    return out.reshape(b, sq, hq, d)
+
+
+def _sdpa(q, k, v, mask, scale, attn_cap):
+    sq = q.shape[1]
+    n = QCHUNKS
+    if n <= 1 or sq % n or sq // n < 128:
+        return _sdpa_full(q, k, v, mask, scale, attn_cap)
+    csz = sq // n
+    body = jax.checkpoint(_sdpa_full, static_argnums=(4, 5))
+    outs = [body(q[:, i * csz:(i + 1) * csz], k, v,
+                 mask[:, i * csz:(i + 1) * csz], scale, attn_cap)
+            for i in range(n)]
+    return jnp.concatenate(outs, axis=1)
+
+
+def gqa_forward(params, x: jnp.ndarray, cfg: ArchConfig, kind: str,
+                positions: jnp.ndarray, use_rope: bool = True,
+                policy=None) -> jnp.ndarray:
+    """Train/prefill self-attention. x: (B, S, d); positions: (S,)."""
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dot(x, params["wq"], policy, "attn").reshape(b, s, hq, hd)
+    k = dot(x, params["wk"], policy, "attn").reshape(b, s, hkv, hd)
+    v = dot(x, params["wv"], policy, "attn").reshape(b, s, hkv, hd)
+    if use_rope:
+        cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    mask = attn_mask(positions, positions, kind, cfg.window,
+                     cfg.attn_chunk)[None]
+    out = _sdpa(q, k, v, mask, 1.0 / np.sqrt(hd), cfg.attn_softcap)
+    return dot(out.reshape(b, s, hq * hd), params["wo"], policy, "attn")
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_max, Hkv, D) — possibly in a reduced format
+    v: jnp.ndarray
+    length: jnp.ndarray   # (B,) int32 current fill
+
+
+def init_kv_cache(batch: int, s_max: int, cfg: ArchConfig,
+                  dtype) -> KVCache:
+    shape = (batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((batch,), jnp.int32))
+
+
+def gqa_decode(params, x: jnp.ndarray, cache: KVCache, cfg: ArchConfig,
+               kind: str, use_rope: bool = True, policy=None,
+               cache_fmt=None):
+    """One-token decode. x: (B, 1, d). Returns (out, new_cache)."""
+    b = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = cache.length                                   # (B,)
+    q = dot(x, params["wq"], policy, "attn").reshape(b, 1, hq, hd)
+    k = dot(x, params["wk"], policy, "attn").reshape(b, 1, hkv, hd)
+    v = dot(x, params["wv"], policy, "attn").reshape(b, 1, hkv, hd)
+    if use_rope:
+        cos, sin = rope_freqs(hd, cfg.rope_theta, pos[:, None])
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if cache_fmt is not None:                            # KV-format knob
+        from repro.precision import chop
+        k = chop(k.astype(jnp.float32), cache_fmt).astype(k.dtype)
+        v = chop(v.astype(jnp.float32), cache_fmt).astype(v.dtype)
+    bidx = jnp.arange(b)
+    new_k = cache.k.at[bidx, pos].set(k[:, 0].astype(cache.k.dtype))
+    new_v = cache.v.at[bidx, pos].set(v[:, 0].astype(cache.v.dtype))
+    s_max = cache.k.shape[1]
+    k_pos = jnp.arange(s_max)[None, :].astype(jnp.int32)
+    mask = attn_mask(pos[:, None, None], k_pos[:, None, :], kind,
+                     cfg.window, cfg.attn_chunk)[:, 0]   # (B, 1, S_max)
+    mask &= (k_pos <= pos[:, None])[:, None, :]
+    out = _sdpa(q, new_k.astype(x.dtype), new_v.astype(x.dtype), mask,
+                1.0 / np.sqrt(hd), cfg.attn_softcap)
+    out = dot(out.reshape(b, 1, hq * hd), params["wo"], policy, "attn")
+    return out, KVCache(new_k, new_v, cache.length + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ArchConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    nd = cfg.head_dim                    # per-head nope dim
+    rd = cfg.rope_head_dim
+    vd = cfg.v_head_dim or cfg.head_dim
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": init_dense(ks[0], d, r, dtype),
+        "w_kr": init_dense(ks[1], d, rd, dtype),
+        "kv_norm": jnp.zeros((r,), dtype),
+        "w_uk": (jax.random.normal(ks[2], (r, h, nd), dtype=jnp.float32)
+                 / np.sqrt(r)).astype(dtype),
+        "w_uv": (jax.random.normal(ks[3], (r, h, vd), dtype=jnp.float32)
+                 / np.sqrt(r)).astype(dtype),
+        "wo": init_dense(ks[4], h * vd, d, dtype),
+    }
+    if qr:
+        p["w_dq"] = init_dense(ks[5], d, qr, dtype)
+        p["q_norm"] = jnp.zeros((qr,), dtype)
+        p["w_uq"] = (jax.random.normal(ks[6], (qr, h, nd + rd),
+                                       dtype=jnp.float32)
+                     / np.sqrt(qr)).astype(dtype)
+    else:
+        p["w_uq"] = (jax.random.normal(ks[6], (d, h, nd + rd),
+                                       dtype=jnp.float32)
+                     / np.sqrt(d)).astype(dtype)
+    return p
+
+
+def _mla_q(params, x, cfg, policy):
+    if cfg.q_lora_rank:
+        cq = dot(x, params["w_dq"], policy, "attn")
+        cq = rms_norm(cq, params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhd->bshd", cq, params["w_uq"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, params["w_uq"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    return jnp.split(q, [cfg.head_dim], axis=-1)        # nope, rope
+
+
+def mla_forward(params, x: jnp.ndarray, cfg: ArchConfig,
+                positions: jnp.ndarray, policy=None) -> jnp.ndarray:
+    """Train/prefill MLA with full materialization."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    vd = cfg.v_head_dim or cfg.head_dim
+    q_nope, q_rope = _mla_q(params, x, cfg, policy)
+    ckv = dot(x, params["w_dkv"], policy, "attn")
+    ckv = rms_norm(ckv, params["kv_norm"], cfg.norm_eps)
+    k_rope = dot(x, params["w_kr"], policy, "attn")      # (B,S,rd) one head
+    k_nope = jnp.einsum("bsr,rhd->bshd", ckv, params["w_uk"].astype(x.dtype),
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsr,rhv->bshv", ckv, params["w_uv"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    cos, sin = rope_freqs(cfg.rope_head_dim, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # (B,S,1,rd)
+    scale = 1.0 / np.sqrt(cfg.head_dim + cfg.rope_head_dim)
+    mask = attn_mask(positions, positions, "attn")[None]
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope[:, :, 0],
+                           preferred_element_type=jnp.float32)) * scale
+    probs = jax.nn.softmax(
+        jnp.where(mask[:, None], scores, NEG_INF).astype(jnp.float32), -1)
+    out = jnp.einsum("bhqk,bkhv->bqhv", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32).astype(v.dtype)
+    return dot(out.reshape(b, s, h * vd), params["wo"], policy, "attn")
+
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray      # (B, S_max, kv_lora_rank)
+    k_rope: jnp.ndarray   # (B, S_max, rope_head_dim)
+    length: jnp.ndarray
+
+
+def init_mla_cache(batch: int, s_max: int, cfg: ArchConfig,
+                   dtype) -> MLACache:
+    return MLACache(jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+                    jnp.zeros((batch, s_max, cfg.rope_head_dim), dtype),
+                    jnp.zeros((batch,), jnp.int32))
+
+
+def mla_decode(params, x: jnp.ndarray, cache: MLACache, cfg: ArchConfig,
+               policy=None):
+    """Absorbed-matrix decode: scores/values in the latent space, so the
+    per-token cache is kv_lora + rope_head_dim (~576) regardless of heads."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    vd = cfg.v_head_dim or cfg.head_dim
+    pos = cache.length
+    q_nope, q_rope = _mla_q(params, x, cfg, policy)      # (B,1,H,*)
+    ckv_new = dot(x, params["w_dkv"], policy, "attn")
+    ckv_new = rms_norm(ckv_new, params["kv_norm"], cfg.norm_eps)
+    kr_new = dot(x, params["w_kr"], policy, "attn")
+    cos, sin = rope_freqs(cfg.rope_head_dim, cfg.rope_theta, pos[:, None])
+    q_rope = apply_rope(q_rope, cos, sin)
+    kr_new = apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0]
+    bidx = jnp.arange(b)
+    ckv = cache.ckv.at[bidx, pos].set(ckv_new[:, 0].astype(cache.ckv.dtype))
+    krope = cache.k_rope.at[bidx, pos].set(
+        kr_new[:, 0].astype(cache.k_rope.dtype))
+    # Absorb W_uk into the query: q_abs (B,1,H,r).
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope,
+                       params["w_uk"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = 1.0 / np.sqrt(cfg.head_dim + cfg.rope_head_dim)
+    s_max = ckv.shape[1]
+    scores = (jnp.einsum("bshr,btr->bhst", q_abs, ckv.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,btd->bhst", q_rope, krope.astype(x.dtype),
+                           preferred_element_type=jnp.float32)) * scale
+    valid = (jnp.arange(s_max)[None] <= pos[:, None])[:, None, None]
+    probs = jax.nn.softmax(
+        jnp.where(valid, scores, NEG_INF).astype(jnp.float32), -1)
+    o_lat = jnp.einsum("bhst,btr->bshr", probs.astype(x.dtype),
+                       ckv.astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bshr,rhv->bshv", o_lat,
+                     params["w_uv"].astype(x.dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = dot(out.reshape(b, 1, h * vd), params["wo"], policy, "attn")
+    return out, MLACache(ckv, krope, cache.length + 1)

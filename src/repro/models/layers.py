@@ -1,0 +1,132 @@
+"""Shared neural layers (functional, no framework dependency).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init_* builds them, apply-style
+    functions consume them;
+  * params live in `param_dtype` (fp32 master by default); compute runs in
+    the caller's `dtype` (bf16 on TPU); norm statistics, softmax and router
+    logits are pinned to fp32 (the precision-autotuner's non-negotiables,
+    DESIGN.md §4);
+  * every matmul routes through `dot()` so the precision policy can swap in
+    emulated-format semantics (kernels/qmatmul) without touching model code.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dot(x: jnp.ndarray, w: jnp.ndarray, policy=None,
+        step: str = "default") -> jnp.ndarray:
+    """Policy-routable matmul: x @ w with fp32 MXU accumulation."""
+    if policy is not None:
+        return policy.matmul(x, w, step)
+    return jnp.dot(x, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    xf = x.astype(jnp.float32)
+    return (cap * jnp.tanh(xf / cap)).astype(x.dtype)
+
+
+def activate(x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(act)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, positions: jnp.ndarray):
+    """positions: (..., S) int32 -> (cos, sin) of shape (..., S, head_dim/2)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray,
+               sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    if cos.ndim == 2:
+        cos_, sin_ = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos_, sin_ = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos_ - x2 * sin_,
+                           x2 * cos_ + x1 * sin_], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": init_dense(k1, d_model, d_ff, dtype),
+        "wi_up": init_dense(k2, d_model, d_ff, dtype),
+        "wo": init_dense(k3, d_ff, d_model, dtype),
+    }
+
+
+def ffn(params, x: jnp.ndarray, act: str, policy=None) -> jnp.ndarray:
+    g = activate(dot(x, params["wi_gate"], policy, "ffn"), act)
+    u = dot(x, params["wi_up"], policy, "ffn")
+    return dot(g * u, params["wo"], policy, "ffn")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype, tie: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": (jax.random.normal(k1, (vocab, d_model),
+                                         dtype=jnp.float32) * 0.02
+                       ).astype(dtype)}
+    if not tie:
+        p["unembed"] = init_dense(k2, d_model, vocab, dtype)
+    return p
+
+
+def embed(params, tokens: jnp.ndarray, dtype, scale: bool,
+          d_model: int) -> jnp.ndarray:
+    x = params["embedding"].astype(dtype)[tokens]
+    if scale:
+        x = x * jnp.asarray(np.sqrt(d_model), dtype)
+    return x
+
+
+def unembed(params, x: jnp.ndarray, tie: bool, policy=None) -> jnp.ndarray:
+    if tie:
+        w = params["embedding"].astype(x.dtype).T
+        return jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return jnp.dot(x, params["unembed"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)

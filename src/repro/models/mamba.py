@@ -1,0 +1,164 @@
+"""Mamba-1 (S6) block: in-proj, causal depthwise conv, selective SSM scan.
+
+The scan is chunked: within-chunk `lax.associative_scan` (parallel,
+MXU/VPU-friendly), cross-chunk `lax.scan` carrying the (B, d_inner, d_state)
+boundary state — numerically identical to the full recurrence but with
+bounded intermediates (DESIGN.md §5: this is the TPU-native re-think of the
+CUDA selective-scan kernel; there is no warp-shuffle analogue, the chunk
+boundary IS the parallelism unit). Decode keeps (conv window, ssm state) as
+the cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+from .layers import dot, init_dense
+
+CHUNK = 128
+
+
+def init_mamba(key, cfg: ArchConfig, dtype):
+    d, di, ds, dtr = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank)
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization for A.
+    a_init = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :],
+                      (di, 1))
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di),
+                                     dtype=jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": init_dense(ks[2], di, dtr + 2 * ds, dtype),
+        "dt_proj": init_dense(ks[3], dtr, di, dtype),
+        "dt_bias": (jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       np.log(1e-3), np.log(1e-1)))))
+                    ).astype(jnp.float32),
+        "A_log": jnp.log(a_init),                        # fp32 pinned
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_dense(ks[5], di, d, dtype),
+    }
+
+
+def _ssm_params(params, xc, cfg):
+    """xc: (B, S, di) post-conv activations -> dt, B_t, C_t (fp32)."""
+    dtr, ds = cfg.dt_rank, cfg.ssm_state
+    proj = dot(xc, params["x_proj"]).astype(jnp.float32)
+    dt_in, Bt, Ct = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt_in,
+                    params["dt_proj"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    return dt, Bt, Ct
+
+
+def _scan_chunked(dt, Bt, Ct, xf, A, h0):
+    """Selective scan h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t; y = C_t.h_t,
+    chunked with the (B, chunk, di, ds) discretized tensors built INSIDE the
+    chunk body.
+
+    Materializing dA/dBx for the full sequence costs B*S*di*ds floats
+    (falcon-mamba train_4k: 34 TB/device — the §Perf worst-cell pathology);
+    per-chunk construction bounds it to B*chunk*di*ds and lets XLA keep the
+    state tensors fused/VMEM-resident. Returns (y (B,S,di) fp32, h_last).
+
+    dt, xf: (B, S, di); Bt, Ct: (B, S, ds); A: (di, ds); h0: (B, di, ds).
+    """
+    b, s, di = dt.shape
+    ds = Bt.shape[-1]
+    chunk = CHUNK if s % CHUNK == 0 else s
+    n_chunks = s // chunk
+
+    def chunk_step(h, inputs):
+        dt_c, b_c, c_c, x_c = inputs                     # (B, chunk, ...)
+        dA = jnp.exp(dt_c[..., None] * A[None, None])    # (B,chunk,di,ds)
+        dBx = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        a_acc, bx_acc = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        h_all = bx_acc + a_acc * h[:, None]
+        y_c = jnp.einsum("bsdn,bsn->bsd", h_all, c_c,
+                         preferred_element_type=jnp.float32)
+        return h_all[:, -1], y_c
+
+    def cs(v):
+        return v.reshape(b, n_chunks, chunk, *v.shape[2:]).swapaxes(0, 1)
+
+    h_last, y_chunks = jax.lax.scan(
+        chunk_step, h0, (cs(dt), cs(Bt), cs(Ct), cs(xf)))
+    y = y_chunks.swapaxes(0, 1).reshape(b, s, di)
+    return y, h_last
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, S, di); w: (K, di) depthwise. state: (B, K-1, di) or None."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(k))
+    return out + b.astype(x.dtype), xp[:, -(k - 1):]
+
+
+def mamba_forward(params, x: jnp.ndarray, cfg: ArchConfig,
+                  policy=None) -> jnp.ndarray:
+    """x: (B, S, d) with S % CHUNK == 0 (shapes in this repo are)."""
+    b, s, d = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    xz = dot(x, params["in_proj"], policy, "ssm")
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _causal_conv(xr, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt, Bt, Ct = _ssm_params(params, xc, cfg)
+    A = -jnp.exp(params["A_log"])                        # (di, ds) fp32
+    xf = xc.astype(jnp.float32)
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    y, _ = _scan_chunked(dt, Bt, Ct, xf, A, h0)
+    y = y + params["D"] * xf
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return dot(y, params["out_proj"], policy, "ssm")
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray     # (B, K-1, di)
+    h: jnp.ndarray        # (B, di, ds) fp32
+
+
+def init_mamba_cache(batch: int, cfg: ArchConfig, dtype) -> MambaCache:
+    return MambaCache(
+        jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32))
+
+
+def mamba_decode(params, x: jnp.ndarray, cache: MambaCache,
+                 cfg: ArchConfig, policy=None):
+    """One-token step. x: (B, 1, d)."""
+    b = x.shape[0]
+    xz = dot(x, params["in_proj"], policy, "ssm")
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xr, params["conv_w"], params["conv_b"],
+                                  cache.conv)
+    xc = jax.nn.silu(xc)
+    dt, Bt, Ct = _ssm_params(params, xc, cfg)
+    A = -jnp.exp(params["A_log"])
+    xf = xc.astype(jnp.float32)
+    dA = jnp.exp(dt[:, 0, :, None] * A[None])            # (B,di,ds)
+    dBx = (dt[:, 0] * xf[:, 0])[..., None] * Bt[:, 0, None, :]
+    h = dA * cache.h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Ct[:, 0],
+                   preferred_element_type=jnp.float32)
+    y = y + params["D"] * xf[:, 0]
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    out = dot(y, params["out_proj"], policy, "ssm")
+    return out, MambaCache(conv_state.astype(cache.conv.dtype), h)

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+Design (DESIGN.md §5): tokens are routed with a top-k fp32 router; dispatch
+uses argsort + scatter into per-expert capacity buffers (E, C, d) rather
+than the dense one-hot (T, E, C) einsum — the dense form materializes
+T*E*C elements (1e13 for deepseek-v2 at train_4k) while the scatter form is
+O(T*k*d + E*C*d) and keeps FLOPs at the *active*-parameter level, which is
+what the 6·N_active·D roofline accounting assumes. Under GSPMD the expert
+dimension shards over the "model" axis (EP) and the token dimension over
+"data"; the scatter/gather lowers to all-to-all style collectives.
+
+Over-capacity slots drop (standard capacity-factor semantics); the residual
+stream carries dropped tokens unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+from .layers import activate, dot, init_dense, init_ffn, ffn
+
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    dff = cfg.d_ff_expert or cfg.d_ff
+    keys = jax.random.split(key, 5)
+    p = {
+        "router": init_dense(keys[0], d, cfg.n_experts, jnp.float32,
+                             scale=0.02),
+        "wi_gate": (jax.random.normal(keys[1], (cfg.n_experts, d, dff),
+                                      dtype=jnp.float32)
+                    / np.sqrt(d)).astype(dtype),
+        "wi_up": (jax.random.normal(keys[2], (cfg.n_experts, d, dff),
+                                    dtype=jnp.float32)
+                  / np.sqrt(d)).astype(dtype),
+        "wo": (jax.random.normal(keys[3], (cfg.n_experts, dff, d),
+                                 dtype=jnp.float32)
+               / np.sqrt(dff)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_ffn(keys[4], d,
+                               dff * cfg.n_shared_experts, dtype)
+    return p
+
+
+def capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    c = int(np.ceil(n_tokens * cfg.top_k / cfg.n_experts
+                    * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_ffn(params, x: jnp.ndarray, cfg: ArchConfig,
+            policy=None) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d). Routing per token, group dim = batch."""
+    b, s, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(s, cfg)
+    xt = x.reshape(b, s, d)
+
+    # Router in fp32 (pinned — the kappa-sensitive step, DESIGN §4).
+    logits = jnp.einsum("bsd,de->bse", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, K)             # (B, S, K)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Slot bookkeeping per batch group: sort slots by expert id.
+    slot_e = experts.reshape(b, s * K)                   # (B, T)
+    order = jnp.argsort(slot_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(slot_e, order, axis=-1)
+    # Position within each expert's run = index - first-index-of-expert.
+    t = s * K
+    first = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)
+    posn = jnp.arange(t)[None] - jnp.take_along_axis(first, sorted_e, -1)
+    keep = posn < C
+
+    tok_of_slot = order // K                             # (B, T)
+    xin = jnp.take_along_axis(xt, tok_of_slot[..., None], axis=1)  # (B,T,d)
+    # Scatter into capacity buffers (B, E, C, d).
+    buf = jnp.zeros((b, E, C, d), x.dtype)
+    e_idx = jnp.where(keep, sorted_e, 0)
+    c_idx = jnp.where(keep, posn, 0).astype(jnp.int32)
+    bidx = jnp.arange(b)[:, None] * jnp.ones((1, t), jnp.int32)
+    xin_masked = jnp.where(keep[..., None], xin, 0)
+    buf = buf.at[bidx, e_idx, c_idx].add(xin_masked)
+
+    # Expert FFN, batched over E: (B,E,C,d) x (E,d,f).
+    wd = x.dtype
+    g = activate(jnp.einsum("becd,edf->becf", buf,
+                            params["wi_gate"].astype(wd),
+                            preferred_element_type=jnp.float32).astype(wd),
+                 cfg.act)
+    u = jnp.einsum("becd,edf->becf", buf, params["wi_up"].astype(wd),
+                   preferred_element_type=jnp.float32).astype(wd)
+    h = jnp.einsum("becf,efd->becd", g * u, params["wo"].astype(wd),
+                   preferred_element_type=jnp.float32).astype(wd)
+
+    # Gather back to slots, weight by gates, combine per token.
+    y_slot = h[bidx, e_idx, c_idx]                       # (B, T, d)
+    y_slot = jnp.where(keep[..., None], y_slot, 0)
+    slot_gate = jnp.take_along_axis(gates.reshape(b, t), order, axis=-1)
+    y_slot = y_slot * slot_gate[..., None].astype(wd)
+    y = jnp.zeros_like(xt).at[bidx, tok_of_slot].add(y_slot)
+
+    if cfg.n_shared_experts:
+        y = y + ffn(params["shared"], xt, cfg.act, policy)
+    return y.reshape(b, s, d)
+
+
+def aux_load_balance_loss(params, x: jnp.ndarray,
+                          cfg: ArchConfig) -> jnp.ndarray:
+    """Switch-style load-balance auxiliary (fraction x probability)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    top1 = jnp.argmax(probs, -1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts, dtype=jnp.float32),
+                    axis=(0, 1))
+    imp = jnp.mean(probs, axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac * imp)

@@ -1,0 +1,333 @@
+"""Decoder stack: heterogeneous layer patterns under scan-over-layers.
+
+Depth is organized as [prefix layers (unrolled)] + [n_groups x pattern
+(lax.scan)]: the scanned body contains one full repetition of the arch's
+layer pattern (attention flavors / mamba / MoE cycle), so HLO size and
+compile time are O(pattern), not O(depth). Each scan body is rematerialized
+(jax.checkpoint) — the standard memory/compute trade at 4k-512k context.
+
+The same parameter tree serves train (forward), prefill, and single-token
+decode (with per-layer caches stacked along the scan dimension).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from . import attention as attn
+from . import mamba as ssm
+from . import moe as moe_lib
+from .layers import embed, ffn, init_embed, init_ffn, rms_norm, softcap, \
+    unembed
+
+
+def _use_rope_at(cfg: ArchConfig, layer: int) -> bool:
+    if cfg.nope_every and (layer + 1) % cfg.nope_every == 0:
+        return False
+    return True
+
+
+def _n_groups(layers_tree) -> int:
+    return jax.tree_util.tree_leaves(layers_tree)[0].shape[0]
+
+
+def _scan_groups(group_fn, x, layers_tree):
+    """lax.scan over layer groups with remat; unrolled for <= 2 groups.
+
+    The unrolled path keeps HLO flop/collective accounting exact for the
+    dry-run's truncated-depth calibration (XLA's cost analysis counts a
+    while-loop body once, not trip-count times — launch/dryrun.py diffs two
+    unrolled depths to recover per-group costs)."""
+    n_groups = _n_groups(layers_tree)
+    body = jax.checkpoint(group_fn)
+    if n_groups <= 2:
+        for g in range(n_groups):
+            gp = jax.tree_util.tree_map(lambda v: v[g], layers_tree)
+            x, _ = body(x, gp)
+        return x
+    x, _ = jax.lax.scan(body, x, layers_tree)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, layer: int, dtype) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    kind = cfg.layer_kind(layer)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+    if kind == "mamba":
+        p["mixer"] = ssm.init_mamba(k1, cfg, dtype)
+    elif cfg.use_mla:
+        p["mixer"] = attn.init_mla(k1, cfg, dtype)
+    else:
+        p["mixer"] = attn.init_gqa(k1, cfg, dtype)
+    if kind != "mamba" or cfg.d_ff or cfg.n_experts:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        if cfg.is_moe_layer(layer):
+            p["ffn"] = moe_lib.init_moe(k2, cfg, dtype)
+        elif cfg.d_ff:
+            p["ffn"] = init_ffn(k2, cfg.d_model, cfg.d_ff, dtype)
+    if cfg.post_norms:
+        p["ln1_post"] = jnp.zeros((cfg.d_model,), dtype)
+        if "ffn" in p:
+            p["ln2_post"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> Dict[str, Any]:
+    p_len = cfg.pattern_len
+    body = cfg.n_layers - cfg.first_dense
+    assert body % p_len == 0, (cfg.name, body, p_len)
+    n_groups = body // p_len
+    keys = jax.random.split(key, 3 + cfg.first_dense + n_groups * p_len)
+    params: Dict[str, Any] = {
+        "embed": init_embed(keys[0], cfg.vocab_size, cfg.d_model, dtype,
+                            cfg.tie_embeddings),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    ki = 1
+    prefix = []
+    for l in range(cfg.first_dense):
+        prefix.append(_init_block(keys[ki], cfg, l, dtype))
+        ki += 1
+    if prefix:
+        params["prefix"] = prefix
+    groups = []
+    for g in range(n_groups):
+        grp = {}
+        for j in range(p_len):
+            grp[f"l{j}"] = _init_block(keys[ki], cfg,
+                                       cfg.first_dense + j, dtype)
+            ki += 1
+        groups.append(grp)
+    params["layers"] = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *groups) if n_groups > 1 else \
+        jax.tree_util.tree_map(lambda x: x[None], groups[0])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _block_forward(bp, x, cfg: ArchConfig, layer: int, positions,
+                   policy=None):
+    kind = cfg.layer_kind(layer)
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    if kind == "mamba":
+        a = ssm.mamba_forward(bp["mixer"], h, cfg, policy)
+    elif cfg.use_mla:
+        a = attn.mla_forward(bp["mixer"], h, cfg, positions, policy)
+    else:
+        a = attn.gqa_forward(bp["mixer"], h, cfg, kind, positions,
+                             _use_rope_at(cfg, layer), policy)
+    if cfg.post_norms:
+        a = rms_norm(a, bp["ln1_post"], cfg.norm_eps)
+    x = x + a
+    if "ffn" in bp:
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.is_moe_layer(layer):
+            f = moe_lib.moe_ffn(bp["ffn"], h, cfg, policy)
+        else:
+            f = ffn(bp["ffn"], h, cfg.act, policy)
+        if cfg.post_norms:
+            f = rms_norm(f, bp["ln2_post"], cfg.norm_eps)
+        x = x + f
+    return x
+
+
+def forward(params, tokens: jnp.ndarray, cfg: ArchConfig,
+            dtype=jnp.bfloat16, policy=None,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            residual_sharding=None) -> jnp.ndarray:
+    """tokens: (B, S) int32 -> logits (B, S, vocab) fp32.
+
+    prefix_embeds: modality-stub injection (B, n_prefix, d) replacing the
+    embeddings of the first n_prefix positions (DESIGN.md §4: audio/vlm
+    frontends are stubs supplying precomputed frame/patch embeddings).
+    residual_sharding: optional NamedSharding for the (B, S, d) residual
+    stream at scan-group boundaries — sequence parallelism (DESIGN.md §5)."""
+    x = hidden_states(params, tokens, cfg, dtype, policy, prefix_embeds,
+                      residual_sharding)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings, policy)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits.astype(jnp.float32)
+
+
+def hidden_states(params, tokens: jnp.ndarray, cfg: ArchConfig,
+                  dtype=jnp.bfloat16, policy=None,
+                  prefix_embeds: Optional[jnp.ndarray] = None,
+                  residual_sharding=None) -> jnp.ndarray:
+    """Final-norm hidden states (B, S, d) — forward() without the unembed."""
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, dtype, cfg.embed_scale, cfg.d_model)
+    if prefix_embeds is not None:
+        n = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x[:, n:]], axis=1)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def constrain(v):
+        if residual_sharding is not None:
+            return jax.lax.with_sharding_constraint(v, residual_sharding)
+        return v
+
+    x = constrain(x)
+    for l, bp in enumerate(params.get("prefix", [])):
+        x = constrain(_block_forward(bp, x, cfg, l, positions, policy))
+
+    p_len = cfg.pattern_len
+
+    def group_fn(x, gp):
+        for j in range(p_len):
+            x = _block_forward(gp[f"l{j}"], x, cfg, cfg.first_dense + j,
+                               positions, policy)
+        return constrain(x), None
+
+    x = _scan_groups(group_fn, x, params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+LOSS_CHUNKS = 8
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig,
+            dtype=jnp.bfloat16, policy=None, residual_sharding=None):
+    """Next-token cross entropy, chunked over the sequence.
+
+    The (B, S_chunk, vocab) logits of each chunk are materialized inside a
+    jax.checkpoint region (recomputed in backward), bounding peak memory to
+    one chunk of logits instead of the full (B, S, vocab) tensor — at 200k
+    vocabs this is the difference between ~2 GB and ~20 GB of temps. Chunks
+    are an unrolled python loop, so HLO flop accounting stays exact."""
+    tokens = batch["tokens"]
+    x = hidden_states(params, tokens, cfg, dtype, policy,
+                      batch.get("prefix_embeds"), residual_sharding)
+    targets = jnp.concatenate([tokens[:, 1:],
+                               jnp.zeros_like(tokens[:, :1])], axis=1)
+    mask = batch.get("loss_mask",
+                     jnp.ones_like(tokens, jnp.float32))
+    mask = mask.astype(jnp.float32).at[:, -1].set(0.0)
+
+    s = tokens.shape[1]
+    n_chunks = LOSS_CHUNKS if s % LOSS_CHUNKS == 0 else 1
+
+    @jax.checkpoint
+    def chunk_nll(xc, tc, mc):
+        logits = unembed(params["embed"], xc, cfg.tie_embeddings, policy)
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll * mc)
+
+    csz = s // n_chunks
+    total = 0.0
+    for c in range(n_chunks):
+        sl = slice(c * csz, (c + 1) * csz)
+        total = total + chunk_nll(x[:, sl], targets[:, sl], mask[:, sl])
+    loss = total / jnp.clip(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "ntokens": jnp.sum(mask)}
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, cached)
+# ---------------------------------------------------------------------------
+
+def _init_block_cache(cfg: ArchConfig, layer: int, batch: int, s_max: int,
+                      dtype, kv_dtype=None):
+    kind = cfg.layer_kind(layer)
+    kv_dtype = kv_dtype or dtype
+    if kind == "mamba":
+        return ssm.init_mamba_cache(batch, cfg, dtype)
+    if cfg.use_mla:
+        return attn.init_mla_cache(batch, s_max, cfg, kv_dtype)
+    window = cfg.window if kind == "local" and cfg.window else s_max
+    chunk = cfg.attn_chunk if kind == "chunked" and cfg.attn_chunk else s_max
+    s_eff = min(s_max, max(window, 1) if kind == "local" else s_max)
+    # Windowed/chunked layers could use ring buffers of length window;
+    # kept full-length here for correctness, ring-buffer is a §Perf lever.
+    del s_eff, chunk
+    return attn.init_kv_cache(batch, s_max, cfg, kv_dtype)
+
+
+def init_caches(cfg: ArchConfig, batch: int, s_max: int,
+                dtype=jnp.bfloat16, kv_dtype=None):
+    caches: Dict[str, Any] = {}
+    if cfg.first_dense:
+        caches["prefix"] = [
+            _init_block_cache(cfg, l, batch, s_max, dtype, kv_dtype)
+            for l in range(cfg.first_dense)]
+    p_len = cfg.pattern_len
+    n_groups = (cfg.n_layers - cfg.first_dense) // p_len
+    grp = {f"l{j}": _init_block_cache(cfg, cfg.first_dense + j, batch,
+                                      s_max, dtype, kv_dtype)
+           for j in range(p_len)}
+    caches["layers"] = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None],
+                                   (n_groups,) + x.shape).copy(), grp)
+    return caches
+
+
+def _block_decode(bp, x, cache, cfg: ArchConfig, layer: int, policy=None,
+                  cache_fmt=None):
+    kind = cfg.layer_kind(layer)
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    if kind == "mamba":
+        a, cache = ssm.mamba_decode(bp["mixer"], h, cache, cfg, policy)
+    elif cfg.use_mla:
+        a, cache = attn.mla_decode(bp["mixer"], h, cache, cfg, policy)
+    else:
+        a, cache = attn.gqa_decode(bp["mixer"], h, cache, cfg, kind,
+                                   _use_rope_at(cfg, layer), policy,
+                                   cache_fmt)
+    if cfg.post_norms:
+        a = rms_norm(a, bp["ln1_post"], cfg.norm_eps)
+    x = x + a
+    if "ffn" in bp:
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.is_moe_layer(layer):
+            f = moe_lib.moe_ffn(bp["ffn"], h, cfg, policy)
+        else:
+            f = ffn(bp["ffn"], h, cfg.act, policy)
+        if cfg.post_norms:
+            f = rms_norm(f, bp["ln2_post"], cfg.norm_eps)
+        x = x + f
+    return x, cache
+
+
+def decode_step(params, token: jnp.ndarray, caches, cfg: ArchConfig,
+                dtype=jnp.bfloat16, policy=None, cache_fmt=None):
+    """token: (B, 1) int32 -> (logits (B, 1, vocab), new caches)."""
+    x = embed(params["embed"], token, dtype, cfg.embed_scale, cfg.d_model)
+    new_prefix = []
+    for l, bp in enumerate(params.get("prefix", [])):
+        x, c = _block_decode(bp, x, caches["prefix"][l], cfg, l, policy,
+                             cache_fmt)
+        new_prefix.append(c)
+
+    p_len = cfg.pattern_len
+
+    def group_fn(x, scans):
+        gp, gc = scans
+        new_c = {}
+        for j in range(p_len):
+            x, c = _block_decode(gp[f"l{j}"], x, gc[f"l{j}"], cfg,
+                                 cfg.first_dense + j, policy, cache_fmt)
+            new_c[f"l{j}"] = c
+        return x, new_c
+
+    x, new_layer_caches = jax.lax.scan(group_fn, x,
+                                       (params["layers"],
+                                        caches["layers"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings, policy)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    new_caches = {"layers": new_layer_caches}
+    if new_prefix:
+        new_caches["prefix"] = new_prefix
+    return logits, new_caches

@@ -1,0 +1,13 @@
+"""Precision substrate: format descriptors + round-to-format emulation."""
+from .chop import (chop, chop_matmul, chop_static, chop_stochastic,
+                   chop_tree, rounding_unit, simulate_dtype)
+from .formats import (BF16, E4M3, E5M2, FORMAT_ID, FORMAT_LIST, FORMATS, FP16,
+                      FP32, FP64, SOLVER_LADDER, TF32, TPU_LADDER, FloatFormat,
+                      format_id, get_format, runtime_tables)
+
+__all__ = [
+    "chop", "chop_matmul", "chop_static", "chop_stochastic", "chop_tree", "rounding_unit",
+    "simulate_dtype", "FloatFormat", "get_format", "format_id",
+    "FORMATS", "FORMAT_LIST", "FORMAT_ID", "SOLVER_LADDER", "TPU_LADDER",
+    "BF16", "FP16", "TF32", "FP32", "FP64", "E4M3", "E5M2", "runtime_tables",
+]

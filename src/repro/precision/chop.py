@@ -1,0 +1,289 @@
+"""Round-to-format emulation ("pychop in JAX").
+
+Emulates storage in a reduced floating-point format while computing in a
+wider *carrier* dtype (float32 on TPU, float64 on host for the paper's FP64
+experiments). Rounding is round-to-nearest, ties-to-even (RNE), with correct
+handling of subnormals (of both the target format and the carrier),
+underflow-to-zero, overflow (to inf, or saturation for fp8 formats), signed
+zeros, infs and NaNs.
+
+The implementation is **pure integer bit manipulation** on the carrier's IEEE
+representation. This is deliberate:
+  * XLA:CPU runs with DAZ/FTZ, so float arithmetic cannot even observe
+    carrier-subnormal values (x != 0 is False for subnormal x!);
+  * jnp.frexp / jnp.ldexp / jnp.exp2 are approximate or subnormal-broken;
+  * the identical integer algorithm is the body of the Pallas TPU kernel
+    (kernels/chop), making this module its bit-exact oracle.
+
+Two entry points:
+  chop_static(x, fmt)   — format fixed at trace time.
+  chop(x, fmt_id)       — format id is runtime data (traced integer). A single
+                          compiled program serves every precision action,
+                          which is what makes bandit exploration
+                          recompile-free (DESIGN.md §3.4).
+
+Algorithm (elementwise, on bit patterns):
+  decompose |x| = M · 2^(Eeff - BIAS - MBITS)   (M includes the implicit bit)
+  e      = floor(log2 |x|) = msb(M) + Eeff - BIAS - MBITS
+  q      = max(e, emin) - (t - 1)               (target quantum exponent)
+  s      = number of low bits of M below the quantum
+  Mr     = RNE(M >> s)                          (add half-1 + lsb, shift)
+  y      = Mr · 2^q, reassembled into carrier bits (normal or subnormal)
+  y      = ±inf (or ±xmax for saturating formats) where |y| > xmax
+  0, ±inf, NaN pass through; exact values (s <= 0) pass through.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .formats import (FMT_EMAX, FMT_EMIN, FMT_SATURATE, FMT_T, FMT_XMAX,
+                      FORMAT_LIST, FloatFormat, get_format)
+
+# Carrier descriptions: (uint dtype, word bits, mantissa bits, exp bias,
+# max exponent field).
+_CARRIERS = {
+    jnp.dtype(jnp.float32): (jnp.uint32, 32, 23, 127, 255),
+    jnp.dtype(jnp.float64): (jnp.uint64, 64, 52, 1023, 2047),
+}
+
+# xmax bit patterns per format, per carrier (positive magnitude patterns).
+_F32_MAX = float(np.finfo(np.float32).max)
+FMT_XMAX_BITS32 = np.array(
+    [np.float32(min(f.xmax, _F32_MAX)).view(np.uint32)
+     for f in FORMAT_LIST], dtype=np.uint32)
+FMT_XMAX_BITS64 = np.array(
+    [np.float64(f.xmax).view(np.uint64) for f in FORMAT_LIST],
+    dtype=np.uint64)
+
+
+def _chop_core(x: jnp.ndarray, t, emin, emax, xmax_bits, saturate) -> jnp.ndarray:
+    """Elementwise round-to-format on the carrier's bit patterns.
+
+    t/emin/emax are python ints or traced int32 scalars; xmax_bits is the bit
+    pattern of the format's xmax in the carrier's uint type; saturate is
+    bool-like."""
+    dtype = x.dtype
+    if dtype not in _CARRIERS:
+        raise TypeError(f"unsupported carrier dtype {dtype}")
+    UINT, W, MBITS, BIAS, EFMAX = _CARRIERS[dtype]
+    one = jnp.asarray(1, UINT)
+    sign_mask = one << (W - 1)
+    frac_mask = (one << MBITS) - 1
+    inf_bits = jnp.asarray(EFMAX, UINT) << MBITS
+
+    t = jnp.asarray(t, jnp.int32)
+    emin = jnp.asarray(emin, jnp.int32)
+    xmax_bits = jnp.asarray(xmax_bits, UINT)
+
+    bits = lax.bitcast_convert_type(x, UINT)
+    sign = bits & sign_mask
+    mag = bits & ~sign_mask
+    E = (mag >> MBITS).astype(jnp.int32)
+    frac = mag & frac_mask
+
+    special = E == EFMAX          # inf / nan
+    zero = mag == 0
+    is_sub = E == 0
+
+    M = jnp.where(is_sub, frac, frac | (one << MBITS))
+    Eeff = jnp.where(is_sub, 1, E)
+    base = Eeff - (BIAS + MBITS)                       # |x| = M * 2^base
+    Mg = jnp.where(M == 0, one, M)                     # guard clz for zeros
+    msb = (W - 1) - lax.clz(Mg).astype(jnp.int32)
+    e_x = msb + base
+
+    q = jnp.maximum(e_x, emin) - (t - 1)
+    s = q - base                                       # bits to round off
+    sc = jnp.clip(s, 0, W - 1).astype(UINT)
+    scm1 = jnp.clip(s - 1, 0, W - 1).astype(UINT)
+    lsb = (Mg >> sc) & one
+    round_add = jnp.where(s > 0, ((one << scm1) - 1) + lsb, 0)
+    Mr = (Mg + round_add) >> sc
+    # Full underflow: s >= W would be clipped by sc; |x| < 2^(q-1) there, so
+    # the correctly-rounded result is zero.
+    Mr = jnp.where(s > W - 1, jnp.zeros((), UINT), Mr)
+    exact = s <= 0                                     # already representable
+
+    # --- reassemble Mr * 2^q into carrier bits -----------------------------
+    zero_r = Mr == 0
+    Mr_g = jnp.where(zero_r, one, Mr)
+    msb_r = (W - 1) - lax.clz(Mr_g).astype(jnp.int32)
+    new_e = msb_r + q
+    emin_car = 1 - BIAS
+    sub_res = new_e < emin_car
+
+    shift_n = MBITS - msb_r                            # in [-1, MBITS]
+    left = jnp.clip(shift_n, 0, W - 1).astype(UINT)
+    right = jnp.clip(-shift_n, 0, W - 1).astype(UINT)
+    frac_n = ((Mr_g << left) >> right) & frac_mask
+    bits_n = ((new_e + BIAS).astype(UINT) << MBITS) | frac_n
+
+    k_sub = jnp.clip(q - (emin_car - MBITS), 0, W - 1).astype(UINT)
+    bits_s = Mr_g << k_sub                             # exponent field 0
+
+    out_mag = jnp.where(sub_res, bits_s, bits_n)
+    out_mag = jnp.where(zero_r, jnp.zeros((), UINT), out_mag)
+
+    over = out_mag > xmax_bits
+    sat_mag = jnp.where(jnp.asarray(saturate, bool), xmax_bits, inf_bits)
+    out_mag = jnp.where(over, sat_mag, out_mag)
+
+    out_bits = jnp.where(special | zero | exact, bits, sign | out_mag)
+    return lax.bitcast_convert_type(out_bits, dtype)
+
+
+def _fmt_xmax_bits(f: FloatFormat, dtype) -> int:
+    if dtype == jnp.dtype(jnp.float64):
+        return int(np.float64(f.xmax).view(np.uint64))
+    return int(np.float32(min(f.xmax, _F32_MAX)).view(np.uint32))
+
+
+def chop_static(x: jnp.ndarray, fmt: Union[str, FloatFormat]) -> jnp.ndarray:
+    """Round `x` (carrier float array) to `fmt`, format fixed at trace time."""
+    f = get_format(fmt)
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        raise TypeError(f"chop expects float carrier, got {x.dtype}")
+    if jnp.finfo(x.dtype).nmant + 1 <= f.t and f.name in ("fp32", "fp64"):
+        return x  # identity fast-path: carrier no wider than target
+    return _chop_core(x, f.t, f.emin, f.emax, _fmt_xmax_bits(f, x.dtype),
+                      f.saturate)
+
+
+def chop(x: jnp.ndarray, fmt_id) -> jnp.ndarray:
+    """Round `x` to the format selected by the (possibly traced) integer id."""
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        raise TypeError(f"chop expects float carrier, got {x.dtype}")
+    fmt_id = jnp.asarray(fmt_id, jnp.int32)
+    t = jnp.asarray(FMT_T)[fmt_id]
+    emin = jnp.asarray(FMT_EMIN)[fmt_id]
+    emax = jnp.asarray(FMT_EMAX)[fmt_id]
+    if x.dtype == jnp.dtype(jnp.float64):
+        xmax_bits = jnp.asarray(FMT_XMAX_BITS64)[fmt_id]
+    else:
+        xmax_bits = jnp.asarray(FMT_XMAX_BITS32)[fmt_id]
+    saturate = jnp.asarray(FMT_SATURATE)[fmt_id]
+    return _chop_core(x, t, emin, emax, xmax_bits, saturate)
+
+
+def chop_stochastic(x: jnp.ndarray, fmt_id, key) -> jnp.ndarray:
+    """Stochastic rounding to the format (beyond-paper: unbiased rounding
+    for gradient compression / accumulation — E[chop_sr(x)] == x).
+
+    Integer formulation: with s bits to drop, add U ~ uniform[0, 2^s) before
+    truncating — exactly SR. Carrier-subnormal/overflow handling matches
+    the RNE path."""
+    x = jnp.asarray(x)
+    if x.dtype != jnp.dtype(jnp.float32):
+        raise TypeError("chop_stochastic targets the f32 carrier")
+    fmt_id = jnp.asarray(fmt_id, jnp.int32)
+    t = jnp.asarray(FMT_T)[fmt_id]
+    emin = jnp.asarray(FMT_EMIN)[fmt_id]
+    xmax_bits = jnp.asarray(FMT_XMAX_BITS32)[fmt_id]
+    saturate = jnp.asarray(FMT_SATURATE)[fmt_id]
+
+    UINT, W, MBITS, BIAS, EFMAX = _CARRIERS[x.dtype]
+    one = jnp.asarray(1, UINT)
+    bits = lax.bitcast_convert_type(x, UINT)
+    sign_mask = one << (W - 1)
+    frac_mask = (one << MBITS) - 1
+    sign = bits & sign_mask
+    mag = bits & ~sign_mask
+    E = (mag >> MBITS).astype(jnp.int32)
+    frac = mag & frac_mask
+    special = E == EFMAX
+    zero = mag == 0
+    is_sub = E == 0
+    M = jnp.where(is_sub, frac, frac | (one << MBITS))
+    Eeff = jnp.where(is_sub, 1, E)
+    base = Eeff - (BIAS + MBITS)
+    Mg = jnp.where(M == 0, one, M)
+    msb = (W - 1) - lax.clz(Mg).astype(jnp.int32)
+    q = jnp.maximum(msb + base, emin) - (t - 1)
+    s = q - base
+    sc = jnp.clip(s, 0, W - 1).astype(UINT)
+    u = jax.random.bits(key, x.shape, UINT) & ((one << sc) - 1)
+    Mr = (Mg + u) >> sc
+    Mr = jnp.where(s > W - 1, jnp.zeros((), UINT), Mr)  # deep underflow
+    exact = s <= 0
+    # Reassemble via the shared path: reuse _chop_core's tail by building a
+    # float from Mr * 2^q with overflow/saturation checks.
+    zero_r = Mr == 0
+    Mr_g = jnp.where(zero_r, one, Mr)
+    msb_r = (W - 1) - lax.clz(Mr_g).astype(jnp.int32)
+    new_e = msb_r + q
+    emin_car = 1 - BIAS
+    sub_res = new_e < emin_car
+    shift_n = MBITS - msb_r
+    left = jnp.clip(shift_n, 0, W - 1).astype(UINT)
+    right = jnp.clip(-shift_n, 0, W - 1).astype(UINT)
+    frac_n = ((Mr_g << left) >> right) & frac_mask
+    bits_n = ((new_e + BIAS).astype(UINT) << MBITS) | frac_n
+    k_sub = jnp.clip(q - (emin_car - MBITS), 0, W - 1).astype(UINT)
+    bits_s = Mr_g << k_sub
+    out_mag = jnp.where(sub_res, bits_s, bits_n)
+    out_mag = jnp.where(zero_r, jnp.zeros((), UINT), out_mag)
+    inf_bits = jnp.asarray(EFMAX, UINT) << MBITS
+    over = out_mag > xmax_bits
+    out_mag = jnp.where(over, jnp.where(saturate, xmax_bits, inf_bits),
+                        out_mag)
+    out_bits = jnp.where(special | zero | exact, bits, sign | out_mag)
+    return lax.bitcast_convert_type(out_bits, x.dtype)
+
+
+def chop_tree(tree, fmt_id):
+    """Apply `chop` to every float leaf of a pytree (runtime format id)."""
+    def _leaf(v):
+        v = jnp.asarray(v)
+        if jnp.issubdtype(v.dtype, jnp.floating):
+            return chop(v, fmt_id)
+        return v
+    return jax.tree_util.tree_map(_leaf, tree)
+
+
+def rounding_unit(fmt_id, dtype=jnp.float32) -> jnp.ndarray:
+    """Unit roundoff 2^-t for a (possibly traced) format id."""
+    t = jnp.asarray(FMT_T)[jnp.asarray(fmt_id, jnp.int32)]
+    # 2^-t for t in [3, 53]: exact via integer exponent assembly.
+    if dtype == jnp.dtype(jnp.float64):
+        bits = (1023 - t.astype(jnp.int64)) << 52
+        return lax.bitcast_convert_type(bits, jnp.float64)
+    bits = (127 - t) << 23
+    return lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def chop_matmul(a: jnp.ndarray, b: jnp.ndarray, fmt_id,
+                chop_inputs: bool = True,
+                chop_output: bool = True) -> jnp.ndarray:
+    """Matmul with operands (and result) stored in the emulated format;
+    accumulation happens in the carrier dtype — matching MXU semantics
+    (bf16 x bf16 -> fp32 accumulate) and FMA-style simulation.
+
+    This is the pure-jnp counterpart of kernels/qmatmul.
+    """
+    if chop_inputs:
+        a = chop(a, fmt_id)
+        b = chop(b, fmt_id)
+    out = a @ b
+    if chop_output:
+        out = chop(out, fmt_id)
+    return out
+
+
+def simulate_dtype(x: jnp.ndarray, fmt: Union[str, FloatFormat]) -> jnp.ndarray:
+    """Bit-exact native cast when the host has the dtype, else chop_static.
+
+    Used by tests to cross-validate chop against XLA's native casts.
+    """
+    f = get_format(fmt)
+    if f.native_dtype is not None:
+        native = jnp.dtype(f.native_dtype)
+        if jnp.finfo(native).bits <= jnp.finfo(x.dtype).bits:
+            return x.astype(native).astype(x.dtype)
+    return chop_static(x, f)

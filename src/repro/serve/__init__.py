@@ -1,0 +1,3 @@
+from .decode import ServeConfig, generate, prefill
+
+__all__ = ["ServeConfig", "generate", "prefill"]

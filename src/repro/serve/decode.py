@@ -1,0 +1,70 @@
+"""Batched serving loop: prefill + greedy/temperature decode with caches.
+
+KV-cache storage format is a precision knob (bf16 / fp8-emulated / int8
+would plug in via cache_fmt — the bandit's serve-side action)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, forward, init_caches
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 => greedy
+    compute_dtype: Any = jnp.bfloat16
+    cache_fmt: Optional[int] = None   # repro.precision format id
+
+
+def prefill(params, prompts: jnp.ndarray, cfg: ArchConfig,
+            scfg: ServeConfig, s_max: int):
+    """Feed the prompt through decode steps to warm the caches.
+
+    prompts: (B, S_prompt) int32. Returns (caches, last_logits)."""
+    b, s_prompt = prompts.shape
+    caches = init_caches(cfg, b, s_max, scfg.compute_dtype)
+
+    def step(carry, tok):
+        caches, _ = carry
+        logits, caches = decode_step(params, tok[:, None], caches, cfg,
+                                     scfg.compute_dtype,
+                                     cache_fmt=scfg.cache_fmt)
+        return (caches, logits[:, 0]), None
+
+    (caches, last), _ = jax.lax.scan(
+        step, (caches, jnp.zeros((b, cfg.vocab_size), jnp.float32)),
+        prompts.T)
+    return caches, last
+
+
+def generate(params, prompts: jnp.ndarray, cfg: ArchConfig,
+             scfg: ServeConfig = ServeConfig(), key=None):
+    """Greedy (or sampled) continuation. Returns (B, max_new_tokens)."""
+    b, s_prompt = prompts.shape
+    s_max = s_prompt + scfg.max_new_tokens
+    caches, last = prefill(params, prompts, cfg, scfg, s_max)
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    def pick(logits, k):
+        if scfg.temperature > 0:
+            return jax.random.categorical(k, logits / scfg.temperature,
+                                          axis=-1)
+        return jnp.argmax(logits, axis=-1)
+
+    def step(carry, k):
+        caches, logits = carry
+        tok = pick(logits, k).astype(jnp.int32)
+        new_logits, caches = decode_step(params, tok[:, None], caches, cfg,
+                                         scfg.compute_dtype,
+                                         cache_fmt=scfg.cache_fmt)
+        return (caches, new_logits[:, 0]), tok
+
+    keys = jax.random.split(key, scfg.max_new_tokens)
+    (_, _), toks = jax.lax.scan(step, (caches, last), keys)
+    return toks.T                                  # (B, new_tokens)

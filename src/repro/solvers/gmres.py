@@ -1,0 +1,140 @@
+"""Left-preconditioned MGS-GMRES in emulated precision u_g.
+
+Solves M^{-1} A z = M^{-1} r with M = LU (chopped factors from lu.py),
+entirely in precision u_g: the operator application (matvec + two triangular
+solves), the modified Gram-Schmidt orthogonalization, and the Givens
+least-squares recurrence are all executed with op-level rounding to the
+runtime format id. Accumulations happen in the carrier dtype (MXU-style),
+see DESIGN.md §3.5.
+
+Non-restarted, with a while_loop bounded by m_max; the residual estimate is
+the standard |g_{j+1}| Givens recurrence, relative to the preconditioned
+initial residual norm beta.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.precision import chop
+
+from .triangular import solve_unit_lower, solve_upper
+
+
+class GMRESResult(NamedTuple):
+    z: jnp.ndarray        # solution update
+    iters: jnp.ndarray    # inner iterations performed
+    res_rel: jnp.ndarray  # final relative (preconditioned) residual estimate
+    fail: jnp.ndarray     # non-finite breakdown
+
+
+def chop_mv(A_chopped: jnp.ndarray, v: jnp.ndarray, fmt_id) -> jnp.ndarray:
+    """Matrix-vector product with format-rounded products and result;
+    accumulation in the carrier (FMA/MXU semantics). A must be pre-chopped."""
+    prods = chop(A_chopped * v[None, :], fmt_id)
+    return chop(jnp.sum(prods, axis=1), fmt_id)
+
+
+def _precond(LU, perm, v, fmt_id):
+    y = solve_unit_lower(LU, v[perm], fmt_id)
+    return solve_upper(LU, y, fmt_id)
+
+
+def gmres_precond(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
+                  r: jnp.ndarray, fmt_g, *, m_max: int,
+                  tol: float) -> GMRESResult:
+    """A_g: the system matrix pre-chopped to u_g. r: outer residual."""
+    n = r.shape[-1]
+    dtype = r.dtype
+    zero = jnp.zeros((), dtype)
+
+    def apply_op(v):
+        return _precond(LU, perm, chop_mv(A_g, v, fmt_id=fmt_g), fmt_g)
+
+    rhat = _precond(LU, perm, chop(r, fmt_g), fmt_g)
+    beta = jnp.linalg.norm(rhat)
+    ok0 = jnp.isfinite(beta) & (beta > 0)
+    beta_safe = jnp.where(ok0, beta, jnp.ones((), dtype))
+    v0 = chop(rhat / beta_safe, fmt_g)
+
+    V = jnp.zeros((m_max + 1, n), dtype).at[0].set(jnp.where(ok0, v0, zero))
+    R = jnp.zeros((m_max + 1, m_max), dtype)
+    cs = jnp.zeros((m_max,), dtype)
+    sn = jnp.zeros((m_max,), dtype)
+    g = jnp.zeros((m_max + 1,), dtype).at[0].set(beta)
+
+    def cond(state):
+        *_, j, done = state
+        return (~done) & (j < m_max)
+
+    def body(state):
+        V, R, cs, sn, g, res_prev, j, done = state
+        w = apply_op(V[j])
+
+        def mgs(i, carry):
+            w, h = carry
+            vi = V[i]
+            hij = chop(jnp.sum(chop(w * vi, fmt_g)), fmt_g)
+            w = chop(w - chop(hij * vi, fmt_g), fmt_g)
+            return w, h.at[i].set(hij)
+
+        w, h = lax.fori_loop(0, j + 1, mgs,
+                             (w, jnp.zeros((m_max + 1,), dtype)))
+        hn = jnp.linalg.norm(w)
+        happy = hn <= jnp.asarray(1e-300 if dtype == jnp.float64 else 1e-30,
+                                  dtype)
+        hn_safe = jnp.where(happy, jnp.ones((), dtype), hn)
+        V = V.at[j + 1].set(jnp.where(happy, jnp.zeros_like(w),
+                                      chop(w / hn_safe, fmt_g)))
+        h = h.at[j + 1].set(hn)
+
+        def rot(i, h):
+            hi, hi1 = h[i], h[i + 1]
+            h = h.at[i].set(chop(cs[i] * hi + sn[i] * hi1, fmt_g))
+            return h.at[i + 1].set(chop(-sn[i] * hi + cs[i] * hi1, fmt_g))
+
+        h = lax.fori_loop(0, j, rot, h)
+        hj, hj1 = h[j], h[j + 1]
+        denom = jnp.sqrt(hj * hj + hj1 * hj1)
+        dsafe = jnp.where(denom == 0, jnp.ones((), dtype), denom)
+        c, s = hj / dsafe, hj1 / dsafe
+        cs = cs.at[j].set(c)
+        sn = sn.at[j].set(s)
+        h = h.at[j].set(chop(denom, fmt_g)).at[j + 1].set(zero)
+        R = R.at[:, j].set(h)
+        gj = g[j]
+        g = g.at[j].set(chop(c * gj, fmt_g)).at[j + 1].set(chop(-s * gj, fmt_g))
+
+        res = jnp.abs(g[j + 1])
+        fin = jnp.isfinite(res) & jnp.all(jnp.isfinite(h))
+        # Stall cut: a useless preconditioner (e.g. overflowed low-precision
+        # LU on an ill-conditioned system) makes the residual plateau; give
+        # up once per-iteration reduction falls under 5% past a warmup.
+        stalled = (j >= 4) & (res > 0.95 * res_prev)
+        done = happy | (res <= tol * beta) | stalled | ~fin
+        return V, R, cs, sn, g, res, j + 1, done
+
+    init = (V, R, cs, sn, g, jnp.asarray(jnp.inf, dtype), jnp.int32(0), ~ok0)
+    V, R, cs, sn, g, _, j, done = lax.while_loop(cond, body, init)
+
+    # Back-substitute R y = g on the leading j x j block.
+    def back(i, y):
+        row = m_max - 1 - i
+        rrow = R[row]
+        prods = chop(rrow * y, fmt_g)
+        mask = jnp.arange(m_max) > row
+        ssum = jnp.sum(jnp.where(mask, prods, zero))
+        diag = rrow[row]
+        dsafe = jnp.where(diag == 0, jnp.ones((), dtype), diag)
+        yi = chop(chop(g[row] - ssum, fmt_g) / dsafe, fmt_g)
+        return y.at[row].set(jnp.where(row < j, yi, zero))
+
+    y = lax.fori_loop(0, m_max, back, jnp.zeros((m_max,), dtype))
+    z = chop(jnp.sum(chop(V[:m_max] * y[:, None], fmt_g), axis=0), fmt_g)
+
+    res_rel = jnp.abs(g[j]) / beta_safe
+    fail = ~ok0 | ~jnp.all(jnp.isfinite(z))
+    z = jnp.where(fail, jnp.zeros_like(z), z)
+    return GMRESResult(z, j, res_rel, fail)

@@ -1,0 +1,55 @@
+"""Chopped triangular solves (forward/backward substitution).
+
+Per-row semantics: products rounded to the target format, row-dot
+accumulated in the carrier, one rounding on the subtraction and one on the
+division — FMA-style op-level emulation (DESIGN.md §3.5).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.precision import chop
+
+
+def solve_unit_lower(LU: jnp.ndarray, b: jnp.ndarray, fmt_id) -> jnp.ndarray:
+    """Solve L y = b where L is unit-lower (strict lower triangle of LU)."""
+    n = LU.shape[-1]
+    idx = jnp.arange(n)
+    b = chop(b, fmt_id)
+
+    def step(i, y):
+        row = jnp.take(LU, i, axis=0)
+        prods = chop(row * y, fmt_id)
+        s = jnp.sum(jnp.where(idx < i, prods, jnp.zeros((), b.dtype)))
+        yi = chop(b[i] - s, fmt_id)
+        return y.at[i].set(yi)
+
+    return lax.fori_loop(0, n, step, jnp.zeros_like(b))
+
+
+def solve_upper(LU: jnp.ndarray, y: jnp.ndarray, fmt_id) -> jnp.ndarray:
+    """Solve U x = y where U is the upper triangle (incl. diagonal) of LU."""
+    n = LU.shape[-1]
+    idx = jnp.arange(n)
+    y = chop(y, fmt_id)
+
+    def step(j, x):
+        i = n - 1 - j
+        row = jnp.take(LU, i, axis=0)
+        prods = chop(row * x, fmt_id)
+        s = jnp.sum(jnp.where(idx > i, prods, jnp.zeros((), y.dtype)))
+        diag = row[i]
+        safe = jnp.where(diag == 0, jnp.ones((), y.dtype), diag)
+        xi = chop(chop(y[i] - s, fmt_id) / safe, fmt_id)
+        return x.at[i].set(xi)
+
+    return lax.fori_loop(0, n, step, jnp.zeros_like(y))
+
+
+def lu_solve(LU: jnp.ndarray, perm: jnp.ndarray, b: jnp.ndarray,
+             fmt_id) -> jnp.ndarray:
+    """Solve A x = b given chopped LU factors: x = U \\ (L \\ (P b))."""
+    pb = b[perm]
+    y = solve_unit_lower(LU, pb, fmt_id)
+    return solve_upper(LU, y, fmt_id)

@@ -1,0 +1,17 @@
+from .grad_sync import sync_grads, sync_leaf
+from .optimizer import (AdamWConfig, AdamWState, adamw_init, adamw_update,
+                        global_norm)
+from .precision_hooks import (LMPrecisionPolicy, TrainPrecisionController,
+                              default_policy)
+from .quantize import QTensor, dequantize_int8, quantize_int8
+from .schedule import cosine_with_warmup
+from .train_step import (TrainState, TrainStepConfig, init_train_state,
+                         make_train_step)
+
+__all__ = [
+    "sync_grads", "sync_leaf", "AdamWConfig", "AdamWState", "adamw_init",
+    "adamw_update", "global_norm", "LMPrecisionPolicy",
+    "TrainPrecisionController", "default_policy", "QTensor",
+    "dequantize_int8", "quantize_int8", "cosine_with_warmup", "TrainState",
+    "TrainStepConfig", "init_train_state", "make_train_step",
+]

@@ -1,0 +1,94 @@
+"""AdamW with fp32 master params and optionally int8-quantized moments.
+
+Functional optax-style API (optax is not available offline):
+  state = adamw_init(params, cfg)
+  params, state = adamw_update(params, grads, state, lr, cfg)
+
+With `quantize_moments=True` both Adam moments live as blockwise-int8
+QTensors: 2 bytes/param of optimizer state instead of 8 — the knob that
+lets deepseek-v2-236b train on 512 v5e chips (DESIGN.md §5), and a
+precision-autotuner action in the LM integration."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import QTensor, dequantize_int8, quantize_int8
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_moments: bool = False
+    quant_block: int = 256
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any           # pytree of f32 arrays or QTensors
+    v: Any
+
+
+def _maybe_q(x, cfg: AdamWConfig):
+    return quantize_int8(x, cfg.quant_block) if cfg.quantize_moments else x
+
+
+def _maybe_dq(x, cfg: AdamWConfig):
+    return dequantize_int8(x, cfg.quant_block) if isinstance(x, QTensor) \
+        else x
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: _maybe_q(jnp.zeros(p.shape, jnp.float32), cfg), params)
+    zeros2 = jax.tree_util.tree_map(
+        lambda p: _maybe_q(jnp.zeros(p.shape, jnp.float32), cfg), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros, zeros2)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(params, grads, state: AdamWState, lr,
+                 cfg: AdamWConfig = AdamWConfig()):
+    """params: fp32 master weights. Returns (new_params, new_state, stats)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else 1.0
+
+    is_q = lambda x: isinstance(x, QTensor)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = _maybe_dq(m, cfg)
+        v = _maybe_dq(v, cfg)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vh = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        pf = p.astype(jnp.float32)
+        new_p = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                           + cfg.weight_decay * pf)
+        return new_p.astype(p.dtype), _maybe_q(m, cfg), _maybe_q(v, cfg)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(state.m, is_leaf=is_q)[0]
+    flat_v = jax.tree_util.tree_flatten(state.v, is_leaf=is_q)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm}

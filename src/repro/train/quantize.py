@@ -1,0 +1,43 @@
+"""Blockwise int8 quantization: optimizer moments + gradient compression.
+
+Absmax scheme: per contiguous block of `block` elements (on the flattened
+array), code = round(x / s * 127) with s = absmax(block). Used for
+  * 8-bit Adam moments (fits deepseek-v2-236b optimizer state in HBM,
+    DESIGN.md §5), and
+  * cross-pod gradient compression (train/grad_sync.py),
+both of which are bandit-tunable precision knobs (the paper's technique
+applied to the training stack)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    codes: jnp.ndarray     # int8, original shape
+    scales: jnp.ndarray    # f32, (n_blocks,)
+    # static metadata lives in the shapes; block is implied by scales size
+
+
+def quantize_int8(x: jnp.ndarray, block: int = 256) -> QTensor:
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = -flat.shape[0] % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scales = jnp.max(jnp.abs(blocks), axis=1)
+    safe = jnp.where(scales == 0, 1.0, scales)
+    codes = jnp.clip(jnp.round(blocks / safe[:, None] * 127.0),
+                     -127, 127).astype(jnp.int8)
+    codes = codes.reshape(-1)[:x.size].reshape(shape)
+    return QTensor(codes, scales)
+
+
+def dequantize_int8(q: QTensor, block: int = 256) -> jnp.ndarray:
+    shape = q.codes.shape
+    flat = q.codes.astype(jnp.float32).reshape(-1)
+    pad = -flat.shape[0] % block
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    out = flat * (q.scales[:, None] / 127.0)
+    return out.reshape(-1)[:q.codes.size].reshape(shape)

@@ -1,0 +1,11 @@
+"""Test configuration.
+
+x64 is enabled because the solver substrate reproduces the paper's FP64
+experiments on the CPU host. Model/LM code pins explicit dtypes everywhere,
+so it is insensitive to this flag. The 512-device dry-run flag is
+deliberately NOT set here — smoke tests must see the real (1-device) host;
+dry-run tests spawn a subprocess instead.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,48 @@
+"""Exact-arithmetic (Fraction-based) round-to-format oracle for tests.
+
+This is the ground truth for repro.precision.chop and kernels/chop: correct
+single-rounding RNE with gradual underflow, independent of any float
+arithmetic. (XLA's native f64->bf16 casts double-round through f32 and flush
+target subnormals, so they are NOT a valid oracle.)
+"""
+import math
+from fractions import Fraction
+
+import numpy as np
+
+
+def chop_oracle(v: float, t: int, emin: int, emax: int, xmax: float,
+                saturate: bool) -> float:
+    if not np.isfinite(v) or v == 0:
+        return float(v)
+    fx = Fraction(float(v))
+    e = math.floor(math.log2(abs(float(v))))
+    # log2 can misround at boundaries; fix up exactly.
+    while abs(fx) >= Fraction(2) ** (e + 1):
+        e += 1
+    while abs(fx) < Fraction(2) ** e:
+        e -= 1
+    q = max(e, emin) - (t - 1)
+    scaled = fx / (Fraction(2) ** q)
+    fl = math.floor(scaled)
+    r = scaled - fl
+    if r > Fraction(1, 2):
+        n = fl + 1
+    elif r < Fraction(1, 2):
+        n = fl
+    else:  # tie -> even
+        n = fl if fl % 2 == 0 else fl + 1
+    y = float(Fraction(n) * Fraction(2) ** q)
+    if abs(y) > xmax:
+        return math.copysign(float(xmax) if saturate else math.inf, v)
+    if y == 0.0:
+        return math.copysign(0.0, v)
+    return y
+
+
+def chop_oracle_array(x: np.ndarray, fmt) -> np.ndarray:
+    """Vectorized oracle for a FloatFormat; returns same dtype as x."""
+    out = np.array([chop_oracle(float(v), fmt.t, fmt.emin, fmt.emax,
+                                fmt.xmax, fmt.saturate)
+                    for v in np.asarray(x, dtype=np.float64).ravel()])
+    return out.reshape(np.shape(x)).astype(np.asarray(x).dtype)

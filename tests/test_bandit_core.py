@@ -1,0 +1,216 @@
+"""Bandit core tests: action space, discretizer, rewards, Q-learning."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Discretizer, QTable, RewardConfig, W1, W2,
+                        accuracy_term, epsilon_schedule, full_action_space,
+                        is_monotone, penalty_term, precision_term,
+                        reduced_action_space, reduced_size, reward)
+from repro.precision import FORMAT_ID, FORMATS
+from repro.solvers.ir import CONVERGED, FAILED
+
+
+# ---------------------------------------------------------------------------
+# Action space (Eq. 11-12)
+# ---------------------------------------------------------------------------
+
+def test_reduced_action_space_count_paper():
+    """256 -> 35 (~86% reduction), paper §3.2."""
+    space = reduced_action_space()
+    assert space.n_actions == 35 == reduced_size(4, 4)
+    assert full_action_space().n_actions == 256
+    assert 1 - 35 / 256 == pytest.approx(0.863, abs=0.01)
+
+
+@pytest.mark.parametrize("m,k", [(2, 2), (3, 4), (4, 4), (7, 3)])
+def test_reduced_size_formula(m, k):
+    from math import comb
+    assert reduced_size(m, k) == comb(m + k - 1, k)
+
+
+def test_actions_monotone_and_ordered():
+    space = reduced_action_space()
+    for row in space.ladder_idx:
+        assert is_monotone(row)
+    # significand bits non-decreasing within each action (Eq. 11)
+    for a in range(space.n_actions):
+        bits = space.significand_bits(a)
+        assert list(bits) == sorted(bits)
+    # first action = all-lowest, last = all-highest
+    assert space.names(0) == ("bf16",) * 4
+    assert space.names(space.n_actions - 1) == ("fp64",) * 4
+
+
+def test_subsample_keeps_extremes():
+    space = reduced_action_space(subsample=9, seed=1)
+    assert space.n_actions == 9
+    assert space.names(0) == ("bf16",) * 4
+    assert space.names(space.n_actions - 1) == ("fp64",) * 4
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=2, max_value=5), st.integers(min_value=2,
+                                                          max_value=4))
+def test_prop_reduced_space_is_exactly_monotone_subset(m, k):
+    ladder = ["e5m2", "e4m3", "bf16", "fp16", "tf32"][:m]
+    red = reduced_action_space(tuple(ladder), k)
+    full = full_action_space(tuple(ladder), k)
+    mono = [row for row in full.ladder_idx.tolist() if is_monotone(row)]
+    assert sorted(mono) == sorted(red.ladder_idx.tolist())
+    assert red.n_actions == reduced_size(m, k)
+
+
+# ---------------------------------------------------------------------------
+# Discretizer (Eq. 19-20)
+# ---------------------------------------------------------------------------
+
+def test_discretizer_bins_and_clipping():
+    feats = np.array([[0.0, 0.0], [9.0, 4.0]])
+    d = Discretizer.fit(feats, (10, 5))
+    assert d.n_states == 50
+    assert d(np.array([0.0, 0.0])) == 0
+    assert d(np.array([9.0, 4.0])) == 49       # max clips into last bin
+    assert d(np.array([100.0, 100.0])) == 49   # out-of-range clips
+    assert d(np.array([-100.0, -100.0])) == 0
+    # Eq. 20 indexing: s = bin1 * n2 + bin2
+    assert d(np.array([0.0, 4.0])) == 4
+    assert d(np.array([9.0, 0.0])) == 45
+
+
+def test_discretizer_roundtrip_serialization():
+    feats = np.random.default_rng(0).uniform(0, 10, (50, 2))
+    d = Discretizer.fit(feats, (10, 10))
+    d2 = Discretizer.from_dict(d.to_dict())
+    x = np.random.default_rng(1).uniform(-5, 15, (100, 2))
+    np.testing.assert_array_equal(d(x), d2(x))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(-1e6, 1e6), st.floats(-1e6, 1e6))
+def test_prop_discretizer_in_bounds(a, b):
+    feats = np.array([[0.0, -3.0], [5.0, 7.0]])
+    d = Discretizer.fit(feats, (7, 3))
+    s = d(np.array([a, b]))
+    assert 0 <= s < d.n_states
+
+
+# ---------------------------------------------------------------------------
+# Rewards (Eq. 21-25)
+# ---------------------------------------------------------------------------
+
+def test_precision_term_prefers_low_precision_and_damps_with_kappa():
+    bf = np.full(4, FORMAT_ID["bf16"])
+    f64 = np.full(4, FORMAT_ID["fp64"])
+    assert precision_term(bf, 10.0) > precision_term(f64, 10.0)
+    assert precision_term(bf, 10.0) > precision_term(bf, 1e8)
+    # Eq. 22 exact value: 4 * 53/(8 * (1+1)) at kappa=10
+    assert precision_term(bf, 10.0) == pytest.approx(4 * 53 / (8 * 2))
+    assert precision_term(f64, 1.0) == pytest.approx(4.0)
+
+
+def test_accuracy_term_shape():
+    cfg = RewardConfig()
+    good = accuracy_term(1e-14, 1e-17, cfg)
+    bad = accuracy_term(1.0, 1e-3, cfg)
+    awful = accuracy_term(1e9, 1e5, cfg)
+    assert good > bad > awful
+    # theta-capped below (Eq. 24): worst case is -2*C1*theta
+    assert awful == pytest.approx(-2 * cfg.C1 * cfg.theta)
+    # eps-floored above: best case is -2*C1*log10(eps)
+    assert good <= -2 * cfg.C1 * np.log10(cfg.eps) + 1e-9
+
+
+def test_penalty_term():
+    assert penalty_term(1) == 0.0
+    assert penalty_term(8) == 3.0
+    assert penalty_term(0) == 0.0
+
+
+def test_reward_composition_and_failure():
+    act = np.full(4, FORMAT_ID["fp32"])
+    r = reward(1e-10, 1e-12, 4, CONVERGED, act, 100.0, W1)
+    expected = (W1.w2 * precision_term(act, 100.0)
+                + W1.w1 * accuracy_term(1e-10, 1e-12, W1)
+                - W1.w3 * penalty_term(4))
+    assert r == pytest.approx(expected)
+    assert reward(1e-10, 1e-12, 4, FAILED, act, 100.0, W1) == W1.fail_reward
+    # no-penalty ablation (Table 6)
+    cfg = RewardConfig(w1=1.0, w2=1.0, use_penalty=False)
+    r_np = reward(1e-10, 1e-12, 1024, CONVERGED, act, 100.0, cfg)
+    r_p = reward(1e-10, 1e-12, 1024, CONVERGED, act, 100.0, W2)
+    assert r_np > r_p
+
+
+def test_w2_more_aggressive_than_w1():
+    """W2 weights precision savings 10x more (paper §5.1)."""
+    bf = np.full(4, FORMAT_ID["bf16"])
+    f64 = np.full(4, FORMAT_ID["fp64"])
+    # A slightly-lossy bf16 run vs a perfect fp64 run at low kappa:
+    r_bf_w1 = reward(1e-7, 1e-8, 8, CONVERGED, bf, 10.0, W1)
+    r_64_w1 = reward(1e-14, 1e-16, 2, CONVERGED, f64, 10.0, W1)
+    r_bf_w2 = reward(1e-7, 1e-8, 8, CONVERGED, bf, 10.0, W2)
+    r_64_w2 = reward(1e-14, 1e-16, 2, CONVERGED, f64, 10.0, W2)
+    assert r_64_w1 > r_bf_w1          # W1: accuracy wins
+    assert (r_bf_w2 - r_64_w2) > (r_bf_w1 - r_64_w1)  # W2 shifts toward low
+
+
+# ---------------------------------------------------------------------------
+# Q-table learning (Eq. 5-6, 13)
+# ---------------------------------------------------------------------------
+
+def test_epsilon_schedule():
+    assert epsilon_schedule(0, 100, 0.02) == 1.0
+    assert epsilon_schedule(50, 100, 0.02) == 0.5
+    assert epsilon_schedule(99, 100, 0.02) == pytest.approx(0.02, abs=0.009)
+    assert epsilon_schedule(1000, 100, 0.02) == 0.02
+
+
+def test_q_update_converges_to_mean_reward():
+    qt = QTable(1, 1, alpha=None)  # 1/N schedule => running mean
+    rng = np.random.default_rng(0)
+    rewards = rng.normal(3.0, 1.0, 2000)
+    for r in rewards:
+        qt.update(0, 0, r)
+    assert qt.Q[0, 0] == pytest.approx(np.mean(rewards))
+    assert qt.N[0, 0] == 2000
+
+
+def test_q_update_constant_alpha():
+    qt = QTable(2, 3, alpha=0.5)
+    rpe = qt.update(1, 2, 10.0)
+    assert rpe == 10.0
+    assert qt.Q[1, 2] == 5.0
+    qt.update(1, 2, 10.0)
+    assert qt.Q[1, 2] == 7.5
+
+
+def test_greedy_ties_break_to_highest_precision():
+    qt = QTable(2, 5, alpha=0.5)
+    assert qt.greedy(0) == 4          # unvisited row -> last (safest) action
+    qt.update(0, 1, 3.0)
+    assert qt.greedy(0) == 1
+    qt.update(0, 3, 3.0)              # equal Q after one 0.5-step? 1.5 each
+    assert qt.Q[0, 1] == qt.Q[0, 3]
+    assert qt.greedy(0) == 3          # tie -> higher index
+
+
+def test_eps_greedy_distribution():
+    qt = QTable(1, 4, alpha=0.5, seed=0)
+    qt.update(0, 2, 5.0)
+    picks = np.array([qt.select(0, 0.5) for _ in range(4000)])
+    frac_greedy = np.mean(picks == 2)
+    # P(greedy) = 1 - eps + eps/|A| = 0.625
+    assert abs(frac_greedy - 0.625) < 0.03
+
+
+def test_qtable_save_load(tmp_path):
+    qt = QTable(4, 7, alpha=0.5, seed=3)
+    qt.update(2, 5, 1.5)
+    p = str(tmp_path / "q.npz")
+    qt.save(p)
+    qt2 = QTable.load(p)
+    np.testing.assert_array_equal(qt.Q, qt2.Q)
+    np.testing.assert_array_equal(qt.N, qt2.N)
+    assert qt2.alpha == 0.5

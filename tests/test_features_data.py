@@ -1,0 +1,80 @@
+"""Feature extraction + problem generation tests."""
+import numpy as np
+import pytest
+
+from repro.core.features import (condest_hager, diag_dominance,
+                                 feature_vector, inf_norm, sparsity,
+                                 system_features)
+from repro.data import (generate_dense_set, generate_sparse_set, pad_batch,
+                        randsvd_dense, sparse_spd)
+
+RNG = np.random.default_rng(3)
+
+
+def test_condest_tracks_true_condition():
+    """Hager-Higham 1-norm estimate within the usual n-factor of kappa_2."""
+    for kappa in [1e2, 1e5, 1e8]:
+        s = randsvd_dense(80, kappa, RNG)
+        true = np.linalg.cond(s.A, 1)
+        est = condest_hager(s.A)
+        assert est <= true * 1.01          # estimator is a lower bound
+        assert est >= true / 100           # but a good one
+        # and log10 of the estimate lands within ~1 decade of target kappa
+        assert abs(np.log10(est) - np.log10(kappa)) < 1.5
+
+
+def test_inf_norm_and_sparsity():
+    A = np.array([[1.0, -2.0], [0.0, 3.0]])
+    assert inf_norm(A) == 3.0
+    assert sparsity(A) == 0.25
+    assert diag_dominance(A) == pytest.approx(min(1.0 / 2.0, 3.0 / 0.0
+                                                  if False else 10.0))
+
+
+def test_feature_vector_order():
+    s = randsvd_dense(50, 1e4, RNG)
+    v = feature_vector(s.features)
+    assert v.shape == (2,)
+    assert abs(v[0] - np.log10(s.features["kappa_est"])) < 1e-9
+
+
+def test_randsvd_mode2_spectrum():
+    s = randsvd_dense(60, 1e6, RNG)
+    sv = np.linalg.svd(s.A, compute_uv=False)
+    assert np.isclose(sv[0], 1.0, rtol=1e-8)
+    assert np.isclose(sv[-2], 1.0, rtol=1e-8)      # n-1 equal singular values
+    assert np.isclose(sv[-1], 1e-6, rtol=1e-6)
+    assert np.isclose(sv[0] / sv[-1], 1e6, rtol=1e-6)
+    np.testing.assert_allclose(s.b, s.A @ s.x_true)
+
+
+def test_sparse_spd_properties():
+    s = sparse_spd(120, 0.01, RNG, kappa_target=1e8)
+    assert np.allclose(s.A, s.A.T)
+    ev = np.linalg.eigvalsh(s.A)
+    assert ev.min() > 0                    # SPD
+    assert 1e6 < s.kappa < 1e11            # lands in the paper's band
+    assert np.all(np.diag(s.A) != 0)
+
+
+def test_generate_sets_diversity():
+    dense = generate_dense_set(8, RNG, n_range=(40, 80),
+                               log10_kappa_range=(1, 9))
+    ns = {s.n for s in dense}
+    ks = [s.kappa for s in dense]
+    assert len(ns) > 1
+    assert max(ks) / min(ks) > 1e2
+    sparse = generate_sparse_set(3, RNG, n_range=(40, 80))
+    assert all(s.kind == "sparse" for s in sparse)
+
+
+def test_pad_batch_solution_preserving():
+    systems = generate_dense_set(3, RNG, n_range=(30, 50),
+                                 log10_kappa_range=(1, 3))
+    A, b, x = pad_batch(systems, n_pad=64)
+    assert A.shape == (3, 64, 64)
+    for i, s in enumerate(systems):
+        np.testing.assert_allclose(A[i] @ x[i], b[i], atol=1e-12)
+        got = np.linalg.solve(A[i], b[i])
+        np.testing.assert_allclose(got, x[i], atol=1e-6)
+        assert np.all(got[s.n:] == 0)

@@ -1,0 +1,56 @@
+"""Shape/dtype/format sweeps: Pallas chop kernel vs pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.chop import chop_op, chop_ref
+from repro.precision import FORMAT_ID, FORMAT_LIST
+
+RNG = np.random.default_rng(7)
+
+SHAPES = [(8, 128), (256, 128), (1000,), (3, 5, 7), (1, 1), (4096,),
+          (17, 129), (2, 384, 64)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("fmt", [f.name for f in FORMAT_LIST])
+def test_chop_kernel_matches_ref(shape, fmt):
+    x = (RNG.standard_normal(shape) *
+         np.exp(RNG.uniform(-40, 40, shape))).astype(np.float32)
+    fid = FORMAT_ID[fmt]
+    got = np.asarray(chop_op(jnp.asarray(x), fid, interpret=True))
+    want = np.asarray(chop_ref(jnp.asarray(x), fid))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_chop_kernel_specials():
+    x = jnp.asarray([0.0, -0.0, np.inf, -np.inf, np.nan, 1e38, -1e-40],
+                    jnp.float32)
+    for f in FORMAT_LIST:
+        got = np.asarray(chop_op(x, FORMAT_ID[f.name], interpret=True))
+        want = np.asarray(chop_ref(x, FORMAT_ID[f.name]))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_chop_kernel_block_rows_sweep():
+    x = jnp.asarray(RNG.standard_normal(5000).astype(np.float32))
+    want = np.asarray(chop_ref(x, FORMAT_ID["bf16"]))
+    for br in (8, 64, 256):
+        got = np.asarray(chop_op(x, FORMAT_ID["bf16"], block_rows=br,
+                                 interpret=True))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_chop_kernel_runtime_format_single_program():
+    """All format ids through one jitted call signature."""
+    x = jnp.asarray(RNG.standard_normal((64, 128)).astype(np.float32))
+    for f in FORMAT_LIST:
+        got = np.asarray(chop_op(x, jnp.int32(FORMAT_ID[f.name]),
+                                 interpret=True))
+        want = np.asarray(chop_ref(x, FORMAT_ID[f.name]))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_chop_kernel_rejects_f64():
+    with pytest.raises(TypeError):
+        chop_op(jnp.zeros((8,), jnp.float64), 0, interpret=True)

@@ -1,0 +1,83 @@
+"""Flash attention kernel vs oracle: kinds x shapes x GQA groups."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_op, flash_ref
+
+RNG = np.random.default_rng(5)
+
+
+def _qkv(b, sq, hq, hkv, d, sk=None):
+    sk = sk or sq
+    q = jnp.asarray(RNG.standard_normal((b, sq, hq, d)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((b, sk, hkv, d)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((b, sk, hkv, d)).astype(np.float32))
+    return q, k, v
+
+
+def _ref(q, k, v, **kw):
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, k.shape[1], d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, v.shape[1], d)
+    o = flash_ref(qf, kf, vf, groups=hq // hkv, **kw)
+    return o.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)
+
+
+CASES = [
+    dict(kind="attn"),
+    dict(kind="local", window=64),
+    dict(kind="local", window=100),
+    dict(kind="chunked", chunk=128),
+    dict(kind="attn", softcap=50.0),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("shape", [(2, 256, 4, 2, 64), (1, 384, 8, 8, 32)])
+def test_flash_matches_ref(case, shape):
+    b, s, hq, hkv, d = shape
+    q, k, v = _qkv(b, s, hq, hkv, d)
+    got = np.asarray(flash_attention_op(q, k, v, bq=128, bk=128,
+                                        interpret=True, **case))
+    want = np.asarray(_ref(q, k, v, **case))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_block_size_sweep():
+    q, k, v = _qkv(1, 256, 2, 1, 32)
+    want = np.asarray(_ref(q, k, v, kind="attn"))
+    for bq, bk in [(64, 64), (128, 64), (256, 128), (64, 256)]:
+        got = np.asarray(flash_attention_op(q, k, v, bq=bq, bk=bk,
+                                            interpret=True))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_matches_model_attention():
+    """Cross-check against the model's einsum attention path."""
+    from repro.configs import get_smoke
+    from repro.models.attention import _sdpa, attn_mask
+    cfg = get_smoke("gemma2-9b")
+    b, s, d = 2, 128, cfg.head_dim
+    q, k, v = _qkv(b, s, cfg.n_heads, cfg.n_kv_heads, d)
+    pos = jnp.arange(s)
+    mask = attn_mask(pos, pos, "local", cfg.window, 0)[None]
+    want = np.asarray(_sdpa(q, k, v, mask, 1.0 / np.sqrt(d),
+                            cfg.attn_softcap))
+    got = np.asarray(flash_attention_op(
+        q, k, v, kind="local", window=cfg.window, softcap=cfg.attn_softcap,
+        bq=64, bk=64, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_flash_bf16_io():
+    q, k, v = _qkv(1, 128, 2, 2, 64)
+    qb, kb, vb = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    got = np.asarray(flash_attention_op(qb, kb, vb, interpret=True,
+                                        bq=64, bk=64)).astype(np.float32)
+    want = np.asarray(_ref(qb.astype(jnp.float32), kb.astype(jnp.float32),
+                           vb.astype(jnp.float32), kind="attn"))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)

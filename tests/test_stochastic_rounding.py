@@ -1,0 +1,47 @@
+"""Stochastic-rounding chop: unbiasedness + representability properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.precision import FORMAT_ID, FORMATS, chop, chop_stochastic
+
+KEY = jax.random.PRNGKey(0)
+X = jnp.asarray(np.random.default_rng(0).standard_normal(8000)
+                .astype(np.float32))
+
+
+@pytest.mark.parametrize("fmt", ["bf16", "e4m3", "fp16", "tf32"])
+def test_sr_outputs_are_representable(fmt):
+    y = chop_stochastic(X, FORMAT_ID[fmt], KEY)
+    np.testing.assert_array_equal(np.asarray(chop(y, FORMAT_ID[fmt])),
+                                  np.asarray(y))
+
+
+def test_sr_unbiased_vs_rne():
+    """Averaged SR reconstructs x ~sqrt(n)x better than a single rounding."""
+    fid = FORMAT_ID["bf16"]
+    keys = jax.random.split(KEY, 64)
+    f = jax.jit(lambda k: chop_stochastic(X, fid, k))
+    mean = np.mean([np.asarray(f(k)) for k in keys], axis=0)
+    bias_sr = np.abs(mean - np.asarray(X)).mean()
+    err_rn = np.abs(np.asarray(chop(X, fid)) - np.asarray(X)).mean()
+    assert bias_sr < 0.35 * err_rn
+
+
+def test_sr_rounds_to_neighbors():
+    """SR result is one of the two enclosing representable values."""
+    fid = FORMAT_ID["bf16"]
+    y = np.asarray(chop_stochastic(X, fid, KEY))
+    lo = np.asarray(chop(X - np.abs(X) * 4e-3, fid))
+    hi = np.asarray(chop(X + np.abs(X) * 4e-3, fid))
+    assert np.all((y >= np.minimum(lo, hi)) & (y <= np.maximum(lo, hi)))
+
+
+def test_sr_specials_and_exact_passthrough():
+    sp = jnp.asarray([0.0, -0.0, np.inf, -np.inf, np.nan, 1.0, 2.0],
+                     jnp.float32)
+    y = np.asarray(chop_stochastic(sp, FORMAT_ID["e4m3"], KEY))
+    assert y[0] == 0 and np.signbit(y[1]) and np.isposinf(y[2])
+    assert np.isneginf(y[3]) and np.isnan(y[4])
+    assert y[5] == 1.0 and y[6] == 2.0          # exactly representable
