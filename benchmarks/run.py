@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   table6  — penalty ablation (paper Table 6 + Fig. 4); shares solve caches
             with table2 via the env registry
   table4  — sparse SPD (paper Tables 3/4/5)
+  service — online autotuning service: req/s + latency vs micro-batch size
   kernels — chop / qmatmul microbenchmarks
   roofline— summary rows from launch/dryrun artifacts, if present
 
@@ -12,7 +13,13 @@ Flags: --full (paper-scale §5.1), --only <name>, --skip-solver.
 """
 from __future__ import annotations
 
+import os
 import sys
+
+# Script entry (`python benchmarks/run.py`) puts benchmarks/ on sys.path,
+# not the repo root the `benchmarks.*` imports need.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
 
 import jax
 
@@ -54,6 +61,10 @@ def main() -> None:
     if want("table4"):
         from benchmarks import table4_sparse
         rows += table4_sparse.run(full=full)
+        _flush(rows)
+    if want("service"):
+        from benchmarks import service_bench
+        rows += service_bench.run(full=full)
         _flush(rows)
     if want("kernels", solver=False):
         from benchmarks import kernel_bench

@@ -1,0 +1,151 @@
+"""Online-service throughput/latency benchmark.
+
+Streams a fixed mixed-size request trace through `service.AutotuneServer`
+at several micro-batch sizes and reports requests/sec plus p50/p90/p99
+per-request latency for each. Per-bucket executables are warmed up (one
+full batch per bucket) before timing so the numbers measure steady-state
+serving, not XLA compilation.
+
+CSV rows follow the `benchmarks/run.py` contract (name,us_per_call,derived)
+and the full report lands in benchmarks/results/service_bench.json.
+
+    PYTHONPATH=src python benchmarks/service_bench.py [--full] [--recompute]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):      # script entry: repo root onto sys.path
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+        __file__))))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (W1, get_scale, load_report, save_report)
+from repro.core import (GMRESIREnv, TrainConfig, bucket_of,
+                        reduced_action_space)
+from repro.data import generate_dense_set, generate_sparse_set
+from repro.service import (AutotuneServer, BatcherConfig, OnlineConfig,
+                           PolicyRegistry)
+from repro.solvers import IRConfig
+
+BATCH_SIZES = (1, 4, 8)
+BATCH_SIZES_FULL = (1, 4, 8, 16)
+
+
+def _trace(n_requests: int, n_range, seed: int):
+    """Mixed dense/sparse request stream, interleaved deterministically."""
+    rng = np.random.default_rng(seed)
+    dense = generate_dense_set(int(n_requests * 0.8), rng, n_range)
+    sparse = generate_sparse_set(n_requests - len(dense), rng, n_range)
+    trace = dense + sparse
+    rng.shuffle(trace)
+    return trace
+
+
+def bench_setting(registry_root, trace, max_batch: int, ir_cfg,
+                  bucket_step: int) -> dict:
+    srv = AutotuneServer(
+        PolicyRegistry(registry_root), ir_cfg, W1,
+        BatcherConfig(max_batch=max_batch, max_wait_s=0.02,
+                      bucket_step=bucket_step, min_bucket=bucket_step),
+        OnlineConfig())
+    # Warm-up: compile each bucket's executable outside the timed window.
+    buckets = {}
+    for s in trace:
+        buckets.setdefault(bucket_of(s.n, bucket_step, bucket_step), s)
+    for s in buckets.values():
+        for _ in range(max_batch):
+            srv.submit(s)
+        srv.drain()
+    warm_responses = srv.telemetry.responses
+
+    t0 = time.perf_counter()
+    ids = []
+    for s in trace:
+        ids.append(srv.submit(s))
+        srv.step()
+    srv.drain()
+    wall = time.perf_counter() - t0
+    responses = [srv.poll(i) for i in ids]
+    assert all(r is not None for r in responses)
+    lat = np.array([r.latency_s for r in responses], dtype=np.float64)
+    tel = srv.telemetry.snapshot()
+    return {
+        "max_batch": max_batch,
+        "n_requests": len(trace),
+        "wall_s": wall,
+        "rps": len(trace) / wall,
+        "latency_s": {f"p{q}": float(np.percentile(lat, q))
+                      for q in (50, 90, 99)},
+        "pad_waste_frac": tel["pad_waste_frac"],
+        "solver_batches": tel["solver_batches"] ,
+        "drift_events": tel["drift_events"],
+        "warmup_responses": warm_responses,
+        "usage_per_solve": tel["usage_per_solve"],
+    }
+
+
+def run(full: bool = False, recompute: bool = False,
+        registry_root: str = None, n_requests: int = None,
+        n_range: tuple = None, batches: tuple = None,
+        episodes: int = None, n_train: int = None,
+        bucket_step: int = 64) -> list:
+    """Scale parameters default to the --full / host presets; tests pass
+    tiny overrides."""
+    cached = None if recompute else load_report("service_bench")
+    if cached is not None:
+        return emit_rows(cached)
+    scale = get_scale(full)
+    n_requests = n_requests or (128 if full else 48)
+    n_range = n_range or (scale.n_range if full else (48, 160))
+    batches = batches or (BATCH_SIZES_FULL if full else BATCH_SIZES)
+    episodes = episodes or (60 if full else 20)
+    n_train = n_train or (scale.n_train if full else 24)
+    rng = np.random.default_rng(scale.seed)
+    train = generate_dense_set(n_train, rng, n_range)
+    space = reduced_action_space()
+    ir_cfg = IRConfig(tau=1e-6)
+    env = GMRESIREnv(train, space, ir_cfg, chunk=8, bucket_step=bucket_step)
+    import tempfile
+    root_ctx = None
+    if registry_root is None:
+        root_ctx = tempfile.TemporaryDirectory()
+    root = registry_root or root_ctx.name
+    PolicyRegistry.warm_start(root, env, W1,
+                              TrainConfig(episodes=episodes,
+                                          seed=scale.seed))
+    trace = _trace(n_requests, n_range, scale.seed + 1)
+    report = {"n_requests": n_requests, "bucket_step": bucket_step,
+              "settings": [bench_setting(root, trace, mb, ir_cfg,
+                                         bucket_step)
+                           for mb in batches]}
+    save_report("service_bench", report)
+    if root_ctx is not None:
+        root_ctx.cleanup()
+    return emit_rows(report)
+
+
+def emit_rows(report: dict) -> list:
+    rows = []
+    for s in report["settings"]:
+        us = 1e6 * s["wall_s"] / max(s["n_requests"], 1)
+        derived = (f"rps={s['rps']:.2f};p50={s['latency_s']['p50']:.4f};"
+                   f"p99={s['latency_s']['p99']:.4f};"
+                   f"pad_waste={s['pad_waste_frac']:.3f}")
+        rows.append(f"service/b{s['max_batch']},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    for r in run(full="--full" in sys.argv,
+                 recompute="--recompute" in sys.argv):
+        print(r)

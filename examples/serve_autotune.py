@@ -1,0 +1,88 @@
+"""Online precision-autotuning service, end to end:
+
+1. Train a policy offline on dense systems (`core.autotune.train_policy`).
+2. Warm-start a versioned policy registry from that run.
+3. Serve a stream of solve requests through the micro-batched server,
+   learning online from every observed reward.
+4. Shift the distribution to ill-conditioned sparse systems mid-stream —
+   watch the |RPE| drift detector trigger re-exploration.
+5. Snapshot the adapted policy, then demonstrate rollback.
+
+    PYTHONPATH=src python examples/serve_autotune.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import tempfile
+
+import numpy as np
+
+from repro.core import GMRESIREnv, TrainConfig, W1, reduced_action_space
+from repro.data import generate_dense_set, generate_sparse_set
+from repro.service import (AutotuneServer, BatcherConfig, OnlineConfig,
+                           PolicyRegistry)
+from repro.solvers import IRConfig
+
+
+def stream(server, systems, tag):
+    ids = [server.submit(s) for s in systems]
+    server.drain()
+    responses = [server.poll(i) for i in ids]
+    drifts = sum(r.drift for r in responses)
+    mean_r = np.mean([r.reward for r in responses])
+    acts = {", ".join(r.action_names) for r in responses}
+    print(f"  [{tag}] {len(responses)} solves, mean reward {mean_r:+.2f}, "
+          f"drift events {drifts}")
+    for a in sorted(acts):
+        print(f"      action seen: ({a})")
+    return responses
+
+
+def main():
+    rng = np.random.default_rng(7)
+    ir_cfg = IRConfig(tau=1e-6)
+    space = reduced_action_space()
+
+    print("== 1. offline training ==")
+    train = generate_dense_set(32, rng, n_range=(40, 120),
+                               log10_kappa_range=(1, 6))
+    env = GMRESIREnv(train, space, ir_cfg, chunk=8, bucket_step=64)
+
+    with tempfile.TemporaryDirectory() as root:
+        print("== 2. warm-start registry ==")
+        reg, version, _ = PolicyRegistry.warm_start(
+            root, env, W1, TrainConfig(episodes=25))
+        print(f"  promoted {version}: {reg.meta(version)['note']}")
+
+        print("== 3. serve a dense stream ==")
+        server = AutotuneServer(
+            reg, ir_cfg, W1,
+            BatcherConfig(max_batch=8, max_wait_s=0.02, bucket_step=64,
+                          min_bucket=64),
+            # Demo-scale drift windows: only non-exploratory visits to known
+            # states feed the detector, and this stream is only 64 requests.
+            OnlineConfig(warmup_updates=6, cooldown_updates=16))
+        dense = generate_dense_set(32, rng, n_range=(40, 120),
+                                   log10_kappa_range=(1, 6))
+        stream(server, dense, "dense")
+
+        print("== 4. distribution shift: ill-conditioned sparse ==")
+        sparse = generate_sparse_set(32, rng, n_range=(40, 120))
+        stream(server, sparse, "sparse-shift")
+        tel = server.telemetry.snapshot()
+        print(f"  drift events total: {tel['drift_events']}, "
+              f"epsilon now {server.learner.epsilon.value:.3f}")
+        print(f"  throughput {tel['throughput_rps']:.1f} req/s, "
+              f"p50 latency {tel['latency_s']['p50'] * 1e3:.1f} ms, "
+              f"pad waste {tel['pad_waste_frac']:.1%}")
+
+        print("== 5. snapshot + rollback ==")
+        v2 = server.snapshot(note="adapted to sparse shift")
+        print(f"  promoted {v2} (current={reg.current_version()})")
+        prev = reg.rollback()
+        print(f"  rolled back to {prev} (current={reg.current_version()})")
+
+
+if __name__ == "__main__":
+    main()

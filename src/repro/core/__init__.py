@@ -7,8 +7,10 @@ from .action_space import (ActionSpace, full_action_space, is_monotone,
 from .autotune import (TrainConfig, TrainHistory, evaluate_fixed_action,
                        evaluate_policy, train_policy)
 from .bandit import QTable, epsilon_schedule
+from .batching import (SolveRecord, bucket_of, pad_to_bucket,
+                       records_from_stats, solve_fixed_batch)
 from .discretize import Discretizer
-from .env import GMRESIREnv, SolveRecord
+from .env import GMRESIREnv
 from .policy import PrecisionPolicy
 from .rewards import (RewardConfig, W1, W2, accuracy_term, penalty_term,
                       precision_term, reward, reward_batch)
@@ -18,6 +20,7 @@ __all__ = [
     "reduced_action_space", "reduced_size", "TrainConfig", "TrainHistory",
     "evaluate_fixed_action", "evaluate_policy", "train_policy", "QTable",
     "epsilon_schedule", "Discretizer", "GMRESIREnv", "SolveRecord",
+    "bucket_of", "pad_to_bucket", "records_from_stats", "solve_fixed_batch",
     "PrecisionPolicy", "RewardConfig", "W1", "W2", "accuracy_term",
     "penalty_term", "precision_term", "reward", "reward_batch",
 ]

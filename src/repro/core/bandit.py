@@ -64,8 +64,14 @@ class QTable:
         return float(rpe)
 
     # -- persistence -------------------------------------------------------
+    @staticmethod
+    def _npz_path(path: str) -> str:
+        # np.savez appends ".npz" when the suffix is absent; normalize so
+        # save(p) and load(p) always agree on the on-disk name.
+        return path if path.endswith(".npz") else path + ".npz"
+
     def save(self, path: str) -> None:
-        np.savez(path, Q=self.Q, N=self.N,
+        np.savez(self._npz_path(path), Q=self.Q, N=self.N,
                  meta=json.dumps({"n_states": self.n_states,
                                   "n_actions": self.n_actions,
                                   "alpha": self.alpha,
@@ -73,7 +79,7 @@ class QTable:
 
     @classmethod
     def load(cls, path: str) -> "QTable":
-        z = np.load(path, allow_pickle=False)
+        z = np.load(cls._npz_path(path), allow_pickle=False)
         meta = json.loads(str(z["meta"]))
         qt = cls(meta["n_states"], meta["n_actions"], meta["alpha"],
                  meta["seed"])

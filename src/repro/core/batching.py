@@ -1,0 +1,79 @@
+"""Shared size-bucketing / padding / fixed-shape batch-solve layer.
+
+Both the offline training environment (`core.env.GMRESIREnv`) and the online
+serving micro-batcher (`service.batcher.MicroBatcher`) funnel solves through
+this module: systems are identity-padded to a size bucket (solution
+preserving, see `data.matrices.pad_system`), stacked into fixed-shape
+(chunk, n_pad, n_pad) batches — short batches are padded by repeating row
+0 — and executed with one `gmres_ir_batch` call. Because every batch for a
+given (bucket, chunk) pair has the same shape, XLA compiles each bucket
+exactly once per process, no matter how many batches flow through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.matrices import LinearSystem, pad_system
+from repro.solvers.ir import IRConfig, gmres_ir_batch
+
+
+def bucket_of(n: int, step: int = 128, minimum: int = 128) -> int:
+    """Smallest multiple of `step` (floored at `minimum`) that holds n."""
+    return max(minimum, ((n + step - 1) // step) * step)
+
+
+@dataclasses.dataclass
+class SolveRecord:
+    """Host-side scalar outcome of one (system, action) solve."""
+    ferr: float
+    nbe: float
+    n_outer: int
+    n_gmres: int
+    status: int
+    res_norm: float
+
+
+def pad_to_bucket(system: LinearSystem, bucket_step: int = 128,
+                  minimum: int = 128):
+    """(A, b, x) identity-padded to the system's size bucket."""
+    return pad_system(system, bucket_of(system.n, bucket_step, minimum))
+
+
+def records_from_stats(stats, count: int) -> List[SolveRecord]:
+    """First `count` rows of a batched SolveStats as host SolveRecords."""
+    ferr = np.asarray(stats.ferr)
+    nbe = np.asarray(stats.nbe)
+    n_outer = np.asarray(stats.n_outer)
+    n_gmres = np.asarray(stats.n_gmres)
+    status = np.asarray(stats.status)
+    res = np.asarray(stats.res_norm)
+    return [SolveRecord(float(ferr[j]), float(nbe[j]), int(n_outer[j]),
+                        int(n_gmres[j]), int(status[j]), float(res[j]))
+            for j in range(count)]
+
+
+def solve_fixed_batch(A_rows: Sequence[np.ndarray],
+                      b_rows: Sequence[np.ndarray],
+                      x_rows: Sequence[np.ndarray],
+                      action_rows: Sequence[np.ndarray],
+                      ir_cfg: IRConfig, chunk: int) -> List[SolveRecord]:
+    """One fixed-shape `gmres_ir_batch` call over already-padded rows.
+
+    All rows must share one padded size n_pad; the batch dimension is padded
+    to exactly `chunk` rows by repeating row 0, keeping the compiled shape
+    constant. Returns one SolveRecord per *input* row (pad rows dropped).
+    """
+    k = len(A_rows)
+    assert 0 < k <= chunk, (k, chunk)
+    idx = list(range(k)) + [0] * (chunk - k)
+    A = np.stack([A_rows[i] for i in idx])
+    b = np.stack([b_rows[i] for i in idx])
+    x = np.stack([x_rows[i] for i in idx])
+    acts = np.stack([np.asarray(action_rows[i]) for i in idx])
+    stats = gmres_ir_batch(jnp.asarray(A), jnp.asarray(b), jnp.asarray(x),
+                           jnp.asarray(acts, jnp.int32), ir_cfg)
+    return records_from_stats(stats, k)

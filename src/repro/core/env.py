@@ -10,31 +10,16 @@ action) grid across pods — while the bandit update itself is trivial.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Iterable, List, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.action_space import ActionSpace
+from repro.core.batching import (SolveRecord, bucket_of, solve_fixed_batch)
 from repro.core.features import feature_vector
 from repro.core.rewards import RewardConfig, reward as reward_fn
 from repro.data.matrices import LinearSystem, pad_system
-from repro.solvers.ir import IRConfig, gmres_ir_batch
-
-
-def _bucket(n: int, step: int = 128, minimum: int = 128) -> int:
-    return max(minimum, ((n + step - 1) // step) * step)
-
-
-@dataclasses.dataclass
-class SolveRecord:
-    ferr: float
-    nbe: float
-    n_outer: int
-    n_gmres: int
-    status: int
-    res_norm: float
+from repro.solvers.ir import IRConfig
 
 
 class GMRESIREnv:
@@ -48,7 +33,7 @@ class GMRESIREnv:
         self.kappas = np.array([s.features["kappa_est"] for s in systems])
         self.features = np.stack([feature_vector(s.features)
                                   for s in systems])
-        self._buckets = [_bucket(s.n, bucket_step) for s in systems]
+        self._buckets = [bucket_of(s.n, bucket_step) for s in systems]
         self._padded = {}      # sys_idx -> (A, b, x) padded numpy
         self._cache: Dict[Tuple[int, int], SolveRecord] = {}
         self.n_solves = 0      # actual solver invocations (incl. chunk pad)
@@ -71,29 +56,15 @@ class GMRESIREnv:
         for bucket, plist in by_bucket.items():
             for c0 in range(0, len(plist), self.chunk):
                 chunk_pairs = plist[c0:c0 + self.chunk]
-                # Fixed chunk shape: pad by repeating the first pair.
-                full = chunk_pairs + [chunk_pairs[0]] * (self.chunk -
-                                                         len(chunk_pairs))
-                A = np.stack([self._get_padded(i)[0] for i, _ in full])
-                b = np.stack([self._get_padded(i)[1] for i, _ in full])
-                x = np.stack([self._get_padded(i)[2] for i, _ in full])
-                acts = np.stack([self.action_space.actions[a]
-                                 for _, a in full])
-                st = gmres_ir_batch(jnp.asarray(A), jnp.asarray(b),
-                                    jnp.asarray(x),
-                                    jnp.asarray(acts, jnp.int32),
-                                    self.ir_cfg)
+                recs = solve_fixed_batch(
+                    [self._get_padded(i)[0] for i, _ in chunk_pairs],
+                    [self._get_padded(i)[1] for i, _ in chunk_pairs],
+                    [self._get_padded(i)[2] for i, _ in chunk_pairs],
+                    [self.action_space.actions[a] for _, a in chunk_pairs],
+                    self.ir_cfg, self.chunk)
                 self.n_solves += self.chunk
-                ferr = np.asarray(st.ferr)
-                nbe = np.asarray(st.nbe)
-                no = np.asarray(st.n_outer)
-                ng = np.asarray(st.n_gmres)
-                status = np.asarray(st.status)
-                res = np.asarray(st.res_norm)
-                for j, p in enumerate(chunk_pairs):
-                    self._cache[p] = SolveRecord(
-                        float(ferr[j]), float(nbe[j]), int(no[j]),
-                        int(ng[j]), int(status[j]), float(res[j]))
+                for p, rec in zip(chunk_pairs, recs):
+                    self._cache[p] = rec
 
     def record(self, i: int, a: int) -> SolveRecord:
         if (i, a) not in self._cache:

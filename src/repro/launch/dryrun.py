@@ -78,6 +78,19 @@ def collective_bytes(hlo_text: str):
     return sum(by_type.values()), by_type, counts
 
 
+def _cost_dict(cost) -> dict:
+    """Normalize compiled.cost_analysis() across JAX versions.
+
+    Older JAX returns one dict; newer returns a list of per-module dicts.
+    Use the main (post-SPMD) module only — its totals already include
+    called computations, so summing across modules would double-count."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
+
 def _mem_dict(mem) -> dict:
     out = {}
     for k in ("argument_size_in_bytes", "output_size_in_bytes",
@@ -167,7 +180,7 @@ def _cost_numbers(cfg, shape, mesh):
     with mesh:
         compiled = jax.jit(fn, in_shardings=in_sh,
                            out_shardings=out_sh).lower(*args).compile()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled.cost_analysis())
         total, by_type, counts = collective_bytes(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -253,7 +266,7 @@ def dryrun_cell(arch_name: str, shape_name: str, multi_pod: bool,
         except Exception as e:                    # pragma: no cover
             art["memory"] = {"error": str(e)}
         try:
-            cost = compiled.cost_analysis()
+            cost = _cost_dict(compiled.cost_analysis())
             print({k: v for k, v in cost.items()
                    if k in ("flops", "bytes accessed")})
             art["flops"] = float(cost.get("flops", 0.0))

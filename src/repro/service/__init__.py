@@ -1,0 +1,21 @@
+"""Online precision-autotuning service.
+
+Streaming counterpart of `core.autotune`: accepts `Ax = b` solve requests,
+picks per-step precisions with the live bandit policy, executes through
+size-bucketed fixed-shape micro-batches (one compiled solver per bucket),
+and keeps learning from every observed reward — continual epsilon control,
+EWMA-|RPE| drift detection, and versioned policy snapshots with atomic
+promote/rollback.
+"""
+from .batcher import BatcherConfig, FlushResult, MicroBatcher
+from .online import (DriftDetector, EpsilonController, OnlineConfig,
+                     OnlineLearner, OnlineUpdate)
+from .registry import PolicyRegistry
+from .server import AutotuneServer, SolveResponse
+from .telemetry import Ewma, Telemetry
+
+__all__ = [
+    "AutotuneServer", "BatcherConfig", "DriftDetector", "EpsilonController",
+    "Ewma", "FlushResult", "MicroBatcher", "OnlineConfig", "OnlineLearner",
+    "OnlineUpdate", "PolicyRegistry", "SolveResponse", "Telemetry",
+]

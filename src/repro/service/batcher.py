@@ -1,0 +1,114 @@
+"""Per-bucket micro-batcher for streaming solve requests.
+
+Requests are identity-padded to their size bucket on submit and queued per
+bucket. A bucket flushes when it holds `max_batch` requests (full batch) or
+when its oldest request has waited `max_wait_s` (partial batch, padded by
+repeating row 0 — see `core.batching.solve_fixed_batch`). Every flush for a
+given bucket therefore has the identical (max_batch, n_pad, n_pad) shape,
+so XLA compiles one `gmres_ir_batch` executable per bucket per process and
+every subsequent flush is compile-free.
+
+Single-threaded by design: `pump()` is driven by the server's event loop
+(or a test), and the clock is injectable so flush-by-timeout is exactly
+testable without sleeping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.batching import SolveRecord, bucket_of, solve_fixed_batch
+from repro.data.matrices import LinearSystem, pad_system
+from repro.solvers.ir import IRConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherConfig:
+    max_batch: int = 8          # rows per compiled batch (flush when full)
+    max_wait_s: float = 0.05    # oldest-request deadline for partial flush
+    bucket_step: int = 128
+    min_bucket: int = 128
+
+
+@dataclasses.dataclass
+class _Pending:
+    req_id: int
+    A: np.ndarray               # padded rows
+    b: np.ndarray
+    x: np.ndarray
+    action_row: np.ndarray
+    enqueued_at: float
+    bucket: int
+
+
+@dataclasses.dataclass
+class FlushResult:
+    bucket: int
+    req_ids: List[int]
+    records: List[SolveRecord]
+    n_rows: int                 # rows solved (== max_batch, incl. padding)
+
+
+class MicroBatcher:
+    def __init__(self, ir_cfg: IRConfig,
+                 cfg: BatcherConfig = BatcherConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.ir_cfg = ir_cfg
+        self.cfg = cfg
+        self.clock = clock
+        self._queues: Dict[int, List[_Pending]] = {}
+        self._ids = itertools.count()
+
+    # -- enqueue -----------------------------------------------------------
+    def submit(self, system: LinearSystem, action_row: np.ndarray,
+               req_id: Optional[int] = None) -> Tuple[int, int]:
+        """Queue one (system, action) solve; returns (request id, bucket)."""
+        if req_id is None:
+            req_id = next(self._ids)
+        bucket = bucket_of(system.n, self.cfg.bucket_step,
+                           self.cfg.min_bucket)
+        A, b, x = pad_system(system, bucket)
+        self._queues.setdefault(bucket, []).append(
+            _Pending(req_id, A, b, x, np.asarray(action_row, np.int32),
+                     self.clock(), bucket))
+        return req_id, bucket
+
+    # -- flush -------------------------------------------------------------
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def _flush_bucket(self, bucket: int, entries: List[_Pending]
+                      ) -> FlushResult:
+        records = solve_fixed_batch(
+            [e.A for e in entries], [e.b for e in entries],
+            [e.x for e in entries], [e.action_row for e in entries],
+            self.ir_cfg, self.cfg.max_batch)
+        return FlushResult(bucket, [e.req_id for e in entries], records,
+                           self.cfg.max_batch)
+
+    def pump(self, force: bool = False) -> List[FlushResult]:
+        """Flush every due bucket; with force=True, flush everything."""
+        now = self.clock()
+        out: List[FlushResult] = []
+        for bucket in sorted(self._queues):
+            q = self._queues[bucket]
+            # Full batches always go.
+            while len(q) >= self.cfg.max_batch:
+                out.append(self._flush_bucket(
+                    bucket, q[:self.cfg.max_batch]))
+                del q[:self.cfg.max_batch]
+            # Partial batch goes on deadline (or force).
+            if q and (force or
+                      now - q[0].enqueued_at >= self.cfg.max_wait_s):
+                out.append(self._flush_bucket(bucket, q))
+                q.clear()
+        self._queues = {b: q for b, q in self._queues.items() if q}
+        return out
+
+    def flush_all(self) -> List[FlushResult]:
+        return self.pump(force=True)

@@ -1,0 +1,146 @@
+"""Versioned policy snapshots with atomic promote / rollback.
+
+Layout (one directory per registry):
+
+    <root>/versions/v0001/{qtable.npz, policy.json, meta.json}
+    <root>/CURRENT        — name of the promoted version (atomic os.replace)
+    <root>/HISTORY        — one promoted version name per line, append-only
+
+`publish` writes a snapshot (QTable + Discretizer + ActionSpace via
+`PrecisionPolicy.save`) without making it live; `promote` flips the CURRENT
+pointer atomically so a concurrently-restarting server can never observe a
+half-written policy; `rollback` re-promotes the previously live version.
+`warm_start` bootstraps version 1 from an offline `train_policy` run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import List, Optional, Tuple
+
+from repro.core.autotune import TrainConfig, train_policy
+from repro.core.env import GMRESIREnv
+from repro.core.policy import PrecisionPolicy
+from repro.core.rewards import RewardConfig
+
+
+class PolicyRegistry:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(os.path.join(root, "versions"), exist_ok=True)
+
+    # -- paths -------------------------------------------------------------
+    def _vdir(self, version: str) -> str:
+        return os.path.join(self.root, "versions", version)
+
+    @property
+    def _current_path(self) -> str:
+        return os.path.join(self.root, "CURRENT")
+
+    @property
+    def _history_path(self) -> str:
+        return os.path.join(self.root, "HISTORY")
+
+    # -- queries -----------------------------------------------------------
+    def versions(self) -> List[str]:
+        vdir = os.path.join(self.root, "versions")
+        return sorted(v for v in os.listdir(vdir)
+                      if os.path.isdir(os.path.join(vdir, v)))
+
+    def current_version(self) -> Optional[str]:
+        try:
+            with open(self._current_path) as f:
+                return f.read().strip() or None
+        except FileNotFoundError:
+            return None
+
+    def history(self) -> List[str]:
+        try:
+            with open(self._history_path) as f:
+                return [ln.strip() for ln in f if ln.strip()]
+        except FileNotFoundError:
+            return []
+
+    def meta(self, version: str) -> dict:
+        with open(os.path.join(self._vdir(version), "meta.json")) as f:
+            return json.load(f)
+
+    # -- writes ------------------------------------------------------------
+    def publish(self, policy: PrecisionPolicy, note: str = "",
+                extra_meta: Optional[dict] = None) -> str:
+        """Write a new snapshot; returns its version name (not yet live)."""
+        existing = self.versions()
+        # Numeric max, not existing[-1]: lexicographic order breaks at
+        # v10000 and would silently re-allocate (and overwrite) it forever.
+        n = 1 + max((int(v[1:]) for v in existing), default=0)
+        version = f"v{n:04d}"
+        vdir = self._vdir(version)
+        policy.save(vdir)
+        meta = {"version": version, "note": note, "created_at": time.time(),
+                "n_states": policy.qtable.n_states,
+                "n_actions": policy.qtable.n_actions,
+                "visited_states": int((policy.qtable.N.sum(axis=1) > 0)
+                                      .sum())}
+        meta.update(extra_meta or {})
+        with open(os.path.join(vdir, "meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        return version
+
+    def promote(self, version: str) -> None:
+        """Atomically flip CURRENT to `version`."""
+        if version not in self.versions():
+            raise ValueError(f"unknown version {version!r}")
+        fd, tmp = tempfile.mkstemp(dir=self.root, prefix=".current-")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(version + "\n")
+            os.replace(tmp, self._current_path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        with open(self._history_path, "a") as f:
+            f.write(version + "\n")
+
+    def rollback(self) -> str:
+        """Re-promote the version that was live before the current one.
+
+        Walks back to before the current version's *first* promotion, so
+        consecutive rollbacks step v3 -> v2 -> v1 instead of ping-ponging
+        between the last two entries (a rollback itself appends to HISTORY).
+        """
+        hist = self.history()
+        cur = self.current_version()
+        if cur is None or cur not in hist:
+            raise RuntimeError("no earlier version to roll back to")
+        prior = [v for v in hist[:hist.index(cur)] if v != cur]
+        if not prior:
+            raise RuntimeError("no earlier version to roll back to")
+        self.promote(prior[-1])
+        return prior[-1]
+
+    # -- loading -----------------------------------------------------------
+    def load(self, version: Optional[str] = None) -> PrecisionPolicy:
+        version = version or self.current_version()
+        if version is None:
+            raise RuntimeError("registry has no promoted version")
+        return PrecisionPolicy.load(self._vdir(version))
+
+    # -- bootstrap ---------------------------------------------------------
+    @classmethod
+    def warm_start(cls, root: str, env: GMRESIREnv,
+                   reward_cfg: RewardConfig,
+                   train_cfg: TrainConfig = TrainConfig()
+                   ) -> Tuple["PolicyRegistry", str, PrecisionPolicy]:
+        """Offline `train_policy` run -> published + promoted version 1."""
+        reg = cls(root)
+        policy, hist = train_policy(env, reward_cfg, train_cfg)
+        version = reg.publish(
+            policy, note="warm start (offline train_policy)",
+            extra_meta={"episodes": train_cfg.episodes,
+                        "final_reward": (hist.episode_reward[-1]
+                                         if hist.episode_reward else None)})
+        reg.promote(version)
+        return reg, version, policy

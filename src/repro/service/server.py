@@ -1,0 +1,198 @@
+"""Streaming precision-autotuning server.
+
+Lifecycle of one request (all single-threaded, pump-driven):
+
+  submit(system) ── feature extraction (already attached to the
+      LinearSystem at ingest) → state via the snapshot Discretizer →
+      epsilon-greedy action from the *live* Q-table (greedy side goes
+      through PrecisionPolicy's nearest-visited-bin fallback) → enqueued
+      in the per-bucket micro-batcher.
+
+  step() ── flushes due buckets (full batch or deadline), and for every
+      solved row: Eq. 21 reward from the observed SolveRecord → online
+      Q-update (continual epsilon + drift detection, service.online) →
+      telemetry → a SolveRecord-carrying response retrievable via poll().
+
+The live Q-table starts as a copy of the promoted registry snapshot, so
+the snapshot stays immutable; `snapshot()` publishes the live state back
+as a new version (and promotes it) — crash recovery is just "reload
+CURRENT".
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.action_space import ActionSpace
+from repro.core.bandit import QTable
+from repro.core.batching import SolveRecord
+from repro.core.features import feature_vector
+from repro.core.policy import PrecisionPolicy
+from repro.core.rewards import RewardConfig, reward as reward_fn
+from repro.data.matrices import LinearSystem
+from repro.solvers.ir import IRConfig
+from repro.service.batcher import BatcherConfig, MicroBatcher
+from repro.service.online import OnlineConfig, OnlineLearner
+from repro.service.registry import PolicyRegistry
+from repro.service.telemetry import Telemetry
+
+
+@dataclasses.dataclass
+class SolveResponse:
+    request_id: int
+    action: int                      # index into the action space
+    action_names: Tuple[str, ...]    # (u_f, u, u_g, u_r) format names
+    record: SolveRecord
+    reward: float
+    state: int
+    eps: float                       # epsilon in force when selected
+    policy_version: str
+    bucket: int
+    latency_s: float
+    drift: bool                      # this update triggered re-exploration
+
+
+@dataclasses.dataclass
+class _InFlight:
+    system: LinearSystem
+    state: int
+    action: int
+    eps: float
+    explore: bool               # epsilon coin fired (random action)
+    submitted_at: float
+    bucket: int
+
+
+def _live_qtable(snapshot: QTable, alpha, seed: int) -> QTable:
+    qt = QTable(snapshot.n_states, snapshot.n_actions, alpha, seed)
+    qt.Q = snapshot.Q.copy()
+    qt.N = snapshot.N.copy()
+    return qt
+
+
+class AutotuneServer:
+    def __init__(self,
+                 registry: Union[PolicyRegistry, PrecisionPolicy],
+                 ir_cfg: IRConfig = IRConfig(),
+                 reward_cfg: RewardConfig = RewardConfig(),
+                 batcher_cfg: BatcherConfig = BatcherConfig(),
+                 online_cfg: OnlineConfig = OnlineConfig(),
+                 clock: Callable[[], float] = time.monotonic,
+                 seed: int = 0,
+                 max_retained_responses: int = 65536):
+        if isinstance(registry, PolicyRegistry):
+            self.registry: Optional[PolicyRegistry] = registry
+            snapshot = registry.load()
+            self.policy_version = registry.current_version() or "unversioned"
+        else:
+            self.registry = None
+            snapshot = registry
+            self.policy_version = "unversioned"
+        self.action_space: ActionSpace = snapshot.action_space
+        self.discretizer = snapshot.discretizer
+        self.live = PrecisionPolicy(
+            snapshot.action_space, snapshot.discretizer,
+            _live_qtable(snapshot.qtable, online_cfg.alpha, seed))
+        self.learner = OnlineLearner(self.live.qtable, online_cfg)
+        self.reward_cfg = reward_cfg
+        self.clock = clock
+        self.batcher = MicroBatcher(ir_cfg, batcher_cfg, clock)
+        self.telemetry = Telemetry()
+        self._rng = np.random.default_rng(seed)
+        self._inflight: Dict[int, _InFlight] = {}
+        # Bounded retention for poll(): oldest un-polled responses are
+        # evicted past the cap, so push-style consumers that never poll
+        # don't leak memory over a long-running server's lifetime.
+        self._responses: Dict[int, SolveResponse] = {}
+        self._max_retained = max_retained_responses
+        # Optional subscriber, called with each SolveResponse in completion
+        # order (the order Q-updates were applied) — push-style consumers.
+        self.on_response: Optional[Callable[[SolveResponse], None]] = None
+
+    # -- request path ------------------------------------------------------
+    def select_action(self, features: np.ndarray
+                      ) -> Tuple[int, int, float, bool]:
+        """(state, action, eps, explore): epsilon-greedy, live policy."""
+        state = self.live.state_of(features)
+        eps = self.learner.epsilon.value
+        explore = bool(self._rng.random() < eps)
+        if explore:
+            action = int(self._rng.integers(self.action_space.n_actions))
+        else:
+            action, _ = self.live.predict(features)
+        return state, action, eps, explore
+
+    def submit(self, system: LinearSystem) -> int:
+        feats = feature_vector(system.features)
+        state, action, eps, explore = self.select_action(feats)
+        req_id, bucket = self.batcher.submit(
+            system, self.action_space.actions[action])
+        self._inflight[req_id] = _InFlight(system, state, action, eps,
+                                           explore, self.clock(), bucket)
+        self.telemetry.on_submit(bucket)
+        self.step()          # flush any bucket this submit filled
+        return req_id
+
+    def step(self, force: bool = False) -> List[SolveResponse]:
+        """Pump due micro-batches through solve -> reward -> Q-update."""
+        done: List[SolveResponse] = []
+        for flush in self.batcher.pump(force=force):
+            self.telemetry.on_batch(flush.bucket, len(flush.req_ids),
+                                    flush.n_rows)
+            for req_id, rec in zip(flush.req_ids, flush.records):
+                done.append(self._complete(req_id, rec))
+        return done
+
+    def drain(self) -> List[SolveResponse]:
+        """Force-flush everything still queued."""
+        return self.step(force=True)
+
+    def poll(self, req_id: int) -> Optional[SolveResponse]:
+        """Response for `req_id` if finished (removes it), else None."""
+        return self._responses.pop(req_id, None)
+
+    @property
+    def pending(self) -> int:
+        return self.batcher.pending
+
+    # -- learn path --------------------------------------------------------
+    def _complete(self, req_id: int, rec: SolveRecord) -> SolveResponse:
+        info = self._inflight.pop(req_id)
+        now = self.clock()
+        action_row = self.action_space.actions[info.action]
+        r = reward_fn(rec.ferr, rec.nbe, rec.n_gmres, rec.status,
+                      action_row, info.system.features["kappa_est"],
+                      self.reward_cfg)
+        upd = self.learner.update(info.state, info.action, r,
+                                  explore=info.explore)
+        self.telemetry.on_update(abs(upd.rpe), upd.drift)
+        resp = SolveResponse(
+            request_id=req_id, action=info.action,
+            action_names=self.action_space.names(info.action),
+            record=rec, reward=r, state=info.state, eps=info.eps,
+            policy_version=self.policy_version, bucket=info.bucket,
+            latency_s=now - info.submitted_at, drift=upd.drift)
+        self.telemetry.on_response(resp.latency_s, resp.action_names,
+                                   resp.action, r, now)
+        self._responses[req_id] = resp
+        while len(self._responses) > self._max_retained:
+            self._responses.pop(next(iter(self._responses)))
+        if self.on_response is not None:
+            self.on_response(resp)
+        return resp
+
+    # -- snapshotting ------------------------------------------------------
+    def snapshot(self, note: str = "online snapshot") -> str:
+        """Publish + promote the live policy as a new registry version."""
+        if self.registry is None:
+            raise RuntimeError("server was built without a registry")
+        version = self.registry.publish(
+            self.live, note=note,
+            extra_meta={"online_updates": self.telemetry.updates,
+                        "drift_events": self.telemetry.drift_events})
+        self.registry.promote(version)
+        self.policy_version = version
+        return version

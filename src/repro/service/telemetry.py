@@ -1,0 +1,121 @@
+"""Service telemetry: throughput / latency / precision-usage / reward.
+
+Plain in-process counters — cheap enough to update on every request — with a
+`snapshot()` that renders the whole state as one JSON-ready dict. Latency
+percentiles are computed over a bounded reservoir of the most recent
+samples so a long-running server never grows without bound.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class Ewma:
+    """Exponentially-weighted moving average with bias-corrected warmup."""
+
+    def __init__(self, coeff: float):
+        self.coeff = float(coeff)
+        self._acc = 0.0
+        self._norm = 0.0
+
+    def update(self, x: float) -> float:
+        self._acc = (1.0 - self.coeff) * self._acc + self.coeff * float(x)
+        self._norm = (1.0 - self.coeff) * self._norm + self.coeff
+        return self.value
+
+    @property
+    def value(self) -> float:
+        return self._acc / self._norm if self._norm > 0 else 0.0
+
+
+class Telemetry:
+    def __init__(self, max_latency_samples: int = 4096,
+                 reward_coeff: float = 0.02):
+        self.requests = 0
+        self.responses = 0
+        self.solver_batches = 0
+        self.solver_rows = 0          # rows actually solved (incl. padding)
+        self.padded_rows = 0          # wasted rows from fixed-shape padding
+        self.drift_events = 0
+        self.updates = 0
+        self.batches_per_bucket: Dict[int, int] = {}
+        self.requests_per_bucket: Dict[int, int] = {}
+        self.usage: Dict[str, int] = {}           # per-step format counts
+        self.action_counts: Dict[int, int] = {}
+        self.reward_ewma = Ewma(reward_coeff)
+        self.reward_sum = 0.0
+        self.abs_rpe_ewma = Ewma(reward_coeff)
+        self._latencies = deque(maxlen=max_latency_samples)
+        self._wall: Optional[tuple] = None        # (first_t, last_t)
+
+    # -- recording ---------------------------------------------------------
+    def on_submit(self, bucket: int) -> None:
+        self.requests += 1
+        self.requests_per_bucket[bucket] = \
+            self.requests_per_bucket.get(bucket, 0) + 1
+
+    def on_batch(self, bucket: int, n_live: int, n_rows: int) -> None:
+        self.solver_batches += 1
+        self.solver_rows += n_rows
+        self.padded_rows += n_rows - n_live
+        self.batches_per_bucket[bucket] = \
+            self.batches_per_bucket.get(bucket, 0) + 1
+
+    def on_response(self, latency_s: float, action_names, action: int,
+                    reward: float, now: float) -> None:
+        self.responses += 1
+        self._latencies.append(float(latency_s))
+        for name in action_names:
+            self.usage[name] = self.usage.get(name, 0) + 1
+        self.action_counts[int(action)] = \
+            self.action_counts.get(int(action), 0) + 1
+        self.reward_ewma.update(reward)
+        self.reward_sum += float(reward)
+        if self._wall is None:
+            self._wall = (now, now)
+        else:
+            self._wall = (self._wall[0], now)
+
+    def on_update(self, abs_rpe: float, drift: bool) -> None:
+        self.updates += 1
+        self.abs_rpe_ewma.update(abs_rpe)
+        if drift:
+            self.drift_events += 1
+
+    # -- reporting ---------------------------------------------------------
+    def latency_percentiles(self, qs=(50, 90, 99)) -> Dict[str, float]:
+        if not self._latencies:
+            return {f"p{q}": 0.0 for q in qs}
+        arr = np.asarray(self._latencies)
+        return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+
+    @property
+    def throughput_rps(self) -> float:
+        if self._wall is None or self._wall[1] <= self._wall[0]:
+            return 0.0
+        return (self.responses - 1) / (self._wall[1] - self._wall[0])
+
+    def snapshot(self) -> dict:
+        total = max(self.responses, 1)
+        return {
+            "requests": self.requests,
+            "responses": self.responses,
+            "updates": self.updates,
+            "drift_events": self.drift_events,
+            "solver_batches": self.solver_batches,
+            "solver_rows": self.solver_rows,
+            "padded_rows": self.padded_rows,
+            "pad_waste_frac": self.padded_rows / max(self.solver_rows, 1),
+            "batches_per_bucket": dict(self.batches_per_bucket),
+            "requests_per_bucket": dict(self.requests_per_bucket),
+            "usage_per_solve": {k: v / total
+                                for k, v in sorted(self.usage.items())},
+            "reward_ewma": self.reward_ewma.value,
+            "reward_mean": self.reward_sum / total,
+            "abs_rpe_ewma": self.abs_rpe_ewma.value,
+            "latency_s": self.latency_percentiles(),
+            "throughput_rps": self.throughput_rps,
+        }

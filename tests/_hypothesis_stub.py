@@ -1,0 +1,149 @@
+"""Deterministic stand-in for `hypothesis`, used only when the real package
+is absent (it is declared in requirements.txt; some execution environments
+cannot install it).
+
+Implements exactly the API surface this test-suite uses — ``@given`` over
+``st.integers`` / ``st.floats`` / ``st.sampled_from`` plus
+``@settings(max_examples=..., deadline=...)`` — as a boundary-inclusive
+deterministic sweep: every strategy first yields its edge cases, then
+pseudo-random draws seeded from the test's qualified name, so failures
+reproduce across runs. No shrinking, no database. ``tests/conftest.py``
+registers this module as ``hypothesis`` only on ModuleNotFoundError.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import os
+import sys
+import types
+
+import numpy as np
+
+# Property sweeps are capped to bound suite runtime; the declared
+# max_examples still scales the sweep below the cap.
+_CAP = int(os.environ.get("REPRO_HYPOTHESIS_MAX_EXAMPLES", "60"))
+
+_F64_MAX = np.finfo(np.float64).max
+
+
+class _Strategy:
+    def _boundaries(self):
+        return []
+
+    def _draw(self, rng):
+        raise NotImplementedError
+
+    def examples(self, rng, n: int):
+        out = list(self._boundaries())[:n]
+        while len(out) < n:
+            out.append(self._draw(rng))
+        return out
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2 ** 63) if min_value is None else int(min_value)
+        self.hi = 2 ** 63 - 1 if max_value is None else int(max_value)
+
+    def _boundaries(self):
+        mid = (self.lo + self.hi) // 2
+        return list(dict.fromkeys([self.lo, self.hi, mid]))
+
+    def _draw(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value=None, max_value=None, allow_nan=None,
+                 allow_infinity=None, width=64):
+        self.lo, self.hi = min_value, max_value
+        bounded = min_value is not None or max_value is not None
+        self.allow_inf = (allow_infinity if allow_infinity is not None
+                          else (allow_nan is not False and not bounded)
+                          or (allow_nan is None and not bounded))
+        if bounded:
+            self.allow_inf = False
+
+    def _boundaries(self):
+        if self.lo is not None or self.hi is not None:
+            lo = self.lo if self.lo is not None else -_F64_MAX
+            hi = self.hi if self.hi is not None else _F64_MAX
+            out = [lo, hi]
+            if lo <= 0.0 <= hi:
+                out.append(0.0)
+            if lo <= 1.0 <= hi:
+                out.append(1.0)
+            out.append((lo + hi) / 2.0)
+            return list(dict.fromkeys(out))
+        out = [0.0, -0.0, 1.0, -1.0, 0.5, -0.5, 3.0, 1e-300, -1e-300,
+               5e-324, -5e-324, 1e300, -1e300, _F64_MAX, -_F64_MAX,
+               1.5e-5, 6.1e-5, 65504.0]
+        if self.allow_inf:
+            out += [np.inf, -np.inf]
+        return out
+
+    def _draw(self, rng):
+        if self.lo is not None or self.hi is not None:
+            lo = self.lo if self.lo is not None else -1e30
+            hi = self.hi if self.hi is not None else 1e30
+            if lo > 0 and hi / max(lo, 5e-324) > 1e3:
+                # wide positive range: log-uniform
+                return float(10.0 ** rng.uniform(np.log10(lo),
+                                                 np.log10(hi)))
+            return float(rng.uniform(lo, hi))
+        sign = -1.0 if rng.random() < 0.5 else 1.0
+        return float(sign * 10.0 ** rng.uniform(-300.0, 300.0)
+                     * rng.uniform(1.0, 9.999))
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def examples(self, rng, n: int):
+        # Cycle so every element appears before any repeats.
+        reps = (n + len(self.elements) - 1) // len(self.elements)
+        pool = self.elements * reps
+        return pool[:n]
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(int(getattr(wrapper, "_stub_max_examples", 20)), _CAP)
+            seed = int.from_bytes(
+                hashlib.sha256(fn.__qualname__.encode()).digest()[:4],
+                "big")
+            cols = [s.examples(np.random.default_rng(seed + j), n)
+                    for j, s in enumerate(strategies)]
+            for vals in zip(*cols):
+                fn(*args, *vals, **kwargs)
+        wrapper._stub_max_examples = 20
+        # Strategy-filled params must not look like pytest fixtures.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def settings(max_examples=20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _Integers
+strategies.floats = _Floats
+strategies.sampled_from = _SampledFrom
+
+
+def install():
+    """Register this module as `hypothesis` (call only when absent)."""
+    mod = sys.modules[__name__]
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

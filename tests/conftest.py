@@ -6,6 +6,24 @@ so it is insensitive to this flag. The 512-device dry-run flag is
 deliberately NOT set here — smoke tests must see the real (1-device) host;
 dry-run tests spawn a subprocess instead.
 """
+import importlib.util
+import os
+import sys
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
+
+# Property tests use `hypothesis` (declared in requirements.txt). When the
+# execution environment lacks it, fall back to the deterministic stub so the
+# four property-test modules still collect and run.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_stub",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py"))
+    _stub = importlib.util.module_from_spec(_spec)
+    sys.modules["_hypothesis_stub"] = _stub
+    _spec.loader.exec_module(_stub)
+    _stub.install()

@@ -1,0 +1,345 @@
+"""Online autotuning service: batcher flush semantics, continual learning,
+drift detection, registry versioning, and the end-to-end acceptance path
+(warm start -> stream -> online updates -> benchmark report)."""
+import json
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Discretizer, GMRESIREnv, QTable, TrainConfig, W1,
+                        pad_to_bucket, reduced_action_space)
+from repro.core.policy import PrecisionPolicy
+from repro.data import generate_dense_set, generate_sparse_set
+from repro.data.matrices import randsvd_dense
+from repro.service import (AutotuneServer, BatcherConfig, DriftDetector,
+                           EpsilonController, MicroBatcher, OnlineConfig,
+                           OnlineLearner, PolicyRegistry)
+from repro.solvers import IRConfig, gmres_ir
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if ROOT not in sys.path:          # for `import benchmarks.*`
+    sys.path.insert(0, ROOT)
+
+SPACE = reduced_action_space()
+IR = IRConfig(tau=1e-6)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _systems(n_sys, rng, n_range=(8, 14)):
+    return [randsvd_dense(int(rng.integers(*n_range)), 100.0, rng)
+            for _ in range(n_sys)]
+
+
+def _direct_record(system, action_row, bucket_step, min_bucket,
+                   ir_cfg=IR):
+    A, b, x = pad_to_bucket(system, bucket_step, min_bucket)
+    return gmres_ir(jnp.asarray(A), jnp.asarray(b), jnp.asarray(x),
+                    jnp.asarray(action_row, jnp.int32), ir_cfg)
+
+
+def _assert_matches_direct(rec, system, action_row, bucket_step,
+                           min_bucket):
+    st = _direct_record(system, action_row, bucket_step, min_bucket)
+    assert rec.n_outer == int(st.n_outer)
+    assert rec.n_gmres == int(st.n_gmres)
+    assert rec.status == int(st.status)
+    for got, want in ((rec.ferr, float(st.ferr)), (rec.nbe, float(st.nbe))):
+        if np.isfinite(want):
+            assert got == pytest.approx(want, rel=1e-9, abs=1e-300)
+        else:
+            assert not np.isfinite(got)
+
+
+# ---------------------------------------------------------------------------
+# Micro-batcher flush semantics
+# ---------------------------------------------------------------------------
+
+def test_batcher_flushes_full_batch_without_waiting():
+    clock = FakeClock()
+    mb = MicroBatcher(IR, BatcherConfig(max_batch=3, max_wait_s=10.0,
+                                        bucket_step=16, min_bucket=16),
+                      clock)
+    rng = np.random.default_rng(0)
+    systems = _systems(3, rng)
+    ids = [mb.submit(s, SPACE.actions[-1])[0] for s in systems]
+    assert mb.pending == 3
+    out = mb.pump()                     # zero time elapsed: full batch goes
+    assert len(out) == 1
+    assert out[0].req_ids == ids
+    assert out[0].n_rows == 3           # fixed compiled shape == max_batch
+    assert mb.pending == 0
+    for rec, s in zip(out[0].records, systems):
+        _assert_matches_direct(rec, s, SPACE.actions[-1], 16, 16)
+
+
+def test_batcher_partial_batch_waits_for_deadline():
+    clock = FakeClock()
+    mb = MicroBatcher(IR, BatcherConfig(max_batch=4, max_wait_s=0.5,
+                                        bucket_step=16, min_bucket=16),
+                      clock)
+    rng = np.random.default_rng(1)
+    systems = _systems(2, rng)
+    ids = [mb.submit(s, SPACE.actions[0])[0] for s in systems]
+    assert mb.pump() == []              # under max_batch, deadline not hit
+    clock.advance(0.49)
+    assert mb.pump() == []              # still inside the wait window
+    clock.advance(0.02)                 # oldest entry passes max_wait_s
+    out = mb.pump()
+    assert len(out) == 1 and out[0].req_ids == ids
+    assert len(out[0].records) == 2     # pad rows dropped from results
+    assert out[0].n_rows == 4           # but the solve ran at full shape
+    assert mb.pending == 0
+
+
+def test_batcher_buckets_are_independent():
+    clock = FakeClock()
+    mb = MicroBatcher(IR, BatcherConfig(max_batch=2, max_wait_s=5.0,
+                                        bucket_step=16, min_bucket=16),
+                      clock)
+    rng = np.random.default_rng(2)
+    small = _systems(2, rng, n_range=(8, 14))       # bucket 16
+    big = _systems(1, rng, n_range=(20, 28))        # bucket 32
+    for s in small:
+        mb.submit(s, SPACE.actions[-1])
+    mb.submit(big[0], SPACE.actions[-1])
+    out = mb.pump()                     # only the full small bucket flushes
+    assert len(out) == 1 and out[0].bucket == 16
+    assert mb.pending == 1
+    out = mb.flush_all()                # force the straggler
+    assert len(out) == 1 and out[0].bucket == 32
+    assert mb.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# Online learning: epsilon control + drift
+# ---------------------------------------------------------------------------
+
+def test_epsilon_controller_anneals_and_boosts():
+    cfg = OnlineConfig(eps0=0.2, eps_min=0.02, eps_boost=0.5,
+                       decay_updates=10)
+    ec = EpsilonController(cfg)
+    assert ec.value == pytest.approx(0.2)
+    for _ in range(10):
+        ec.step()
+    assert ec.value == pytest.approx(0.02)
+    ec.boost()
+    assert ec.value == pytest.approx(0.5)
+    for _ in range(5):
+        ec.step()
+    assert 0.02 < ec.value < 0.5        # re-annealing from the boost level
+
+
+def test_online_update_matches_manual_q_update():
+    qt = QTable(4, 3, alpha=0.5, seed=0)
+    learner = OnlineLearner(qt, OnlineConfig(alpha=0.5))
+    upd = learner.update(2, 1, 10.0)
+    assert upd.rpe == pytest.approx(10.0)          # Q was 0
+    assert qt.Q[2, 1] == pytest.approx(5.0)        # 0 + 0.5 * rpe
+    assert qt.N[2, 1] == 1
+    upd = learner.update(2, 1, 10.0)
+    assert upd.rpe == pytest.approx(5.0)
+    assert qt.Q[2, 1] == pytest.approx(7.5)
+
+
+def test_drift_triggers_reexploration_once_per_regime():
+    cfg = OnlineConfig(warmup_updates=5, cooldown_updates=8,
+                       eps0=0.05, eps_min=0.02, eps_boost=0.5,
+                       decay_updates=1000, alpha=0.5,
+                       drift_ratio=2.0, drift_margin=0.25)
+    qt = QTable(1, 1, alpha=0.5, seed=0)
+    learner = OnlineLearner(qt, cfg)
+    # Stable regime: reward 1.0; Q converges, |RPE| -> small.
+    drifts = [learner.update(0, 0, 1.0).drift for _ in range(30)]
+    assert not any(drifts)
+    eps_before = learner.epsilon.value
+    # Regime change: reward jumps far from Q's prediction.
+    triggered = []
+    for _ in range(10):
+        triggered.append(learner.update(0, 0, -20.0).drift)
+    assert any(triggered), "drift never triggered on a regime change"
+    # Exactly one trigger inside the cooldown window.
+    assert sum(triggered) == 1
+    assert learner.epsilon.value > eps_before
+    assert learner.epsilon.value >= 0.4            # boosted toward eps_boost
+
+
+def test_drift_ignores_exploration_and_first_visits():
+    cfg = OnlineConfig(warmup_updates=2, cooldown_updates=2,
+                       drift_ratio=2.0, drift_margin=0.25, alpha=0.5)
+    qt = QTable(8, 2, alpha=0.5, seed=0)
+    learner = OnlineLearner(qt, cfg)
+    for i in range(20):
+        learner.update(0, 0, 1.0)
+    n_before = learner.drift._updates
+    # Exploratory updates never feed the detector...
+    upd = learner.update(0, 0, -50.0, explore=True)
+    assert not upd.drift and learner.drift._updates == n_before
+    # ...nor do first visits to a fresh state (RPE vs an empty Q row).
+    upd = learner.update(5, 1, -50.0)
+    assert not upd.drift and learner.drift._updates == n_before
+
+
+# ---------------------------------------------------------------------------
+# Registry: versioning, atomic promote, rollback
+# ---------------------------------------------------------------------------
+
+def _tiny_policy(seed=0):
+    rng = np.random.default_rng(seed)
+    feats = rng.normal(size=(20, 2))
+    disc = Discretizer.fit(feats, (4, 4))
+    qt = QTable(disc.n_states, SPACE.n_actions, 0.5, seed)
+    qt.Q[:] = rng.normal(size=qt.Q.shape)
+    qt.N[:] = rng.integers(0, 3, size=qt.N.shape)
+    return PrecisionPolicy(SPACE, disc, qt)
+
+
+def test_registry_promote_rollback_roundtrip(tmp_path):
+    reg = PolicyRegistry(str(tmp_path / "reg"))
+    assert reg.current_version() is None
+    p1 = _tiny_policy(1)
+    v1 = reg.publish(p1, note="first")
+    assert reg.current_version() is None           # publish != promote
+    reg.promote(v1)
+    assert reg.current_version() == v1
+
+    p2 = _tiny_policy(2)
+    v2 = reg.publish(p2, note="second")
+    reg.promote(v2)
+    assert reg.current_version() == v2
+    assert reg.versions() == [v1, v2]
+
+    # Round-trip: the promoted snapshot loads back bit-identically.
+    loaded = reg.load()
+    assert np.array_equal(loaded.qtable.Q, p2.qtable.Q)
+    assert np.array_equal(loaded.qtable.N, p2.qtable.N)
+    assert np.array_equal(loaded.discretizer.mins, p2.discretizer.mins)
+
+    # Rollback re-promotes v1; a fresh registry handle agrees (disk truth).
+    assert reg.rollback() == v1
+    assert PolicyRegistry(str(tmp_path / "reg")).current_version() == v1
+    assert np.array_equal(reg.load().qtable.Q, p1.qtable.Q)
+    assert reg.meta(v1)["note"] == "first"
+
+
+def test_registry_consecutive_rollbacks_walk_back(tmp_path):
+    reg = PolicyRegistry(str(tmp_path / "reg"))
+    versions = [reg.publish(_tiny_policy(i)) for i in range(3)]
+    for v in versions:
+        reg.promote(v)
+    v1, v2, v3 = versions
+    assert reg.rollback() == v2          # v3 bad -> back to v2
+    assert reg.rollback() == v1          # v2 also bad -> back to v1, not v3
+    with pytest.raises(RuntimeError):
+        reg.rollback()                   # nothing before v1
+
+
+def test_qtable_save_load_without_npz_suffix(tmp_path):
+    qt = QTable(3, 2, alpha=None, seed=5)
+    qt.update(1, 0, 4.0)
+    path = str(tmp_path / "qtab")           # no .npz suffix
+    qt.save(path)
+    back = QTable.load(path)
+    assert np.array_equal(back.Q, qt.Q)
+    assert np.array_equal(back.N, qt.N)
+    assert back.alpha is None
+
+
+# ---------------------------------------------------------------------------
+# End-to-end acceptance: warm start -> stream -> verify -> benchmark
+# ---------------------------------------------------------------------------
+
+def test_end_to_end_service(tmp_path):
+    rng = np.random.default_rng(42)
+    bucket_step = 16
+    train = generate_dense_set(12, rng, n_range=(12, 40),
+                               log10_kappa_range=(1, 6))
+    env = GMRESIREnv(train, SPACE, IR, chunk=8, bucket_step=bucket_step)
+    reg, version, snap = PolicyRegistry.warm_start(
+        str(tmp_path / "reg"), env, W1, TrainConfig(episodes=4))
+    assert version == "v0001" and reg.current_version() == "v0001"
+    q0 = snap.qtable.Q.copy()
+
+    srv = AutotuneServer(
+        reg, IR, W1,
+        BatcherConfig(max_batch=4, max_wait_s=0.005,
+                      bucket_step=bucket_step, min_bucket=bucket_step),
+        OnlineConfig())
+    completed = []
+    srv.on_response = completed.append
+
+    # >= 64 mixed-size, mixed-kind requests.
+    requests = (generate_dense_set(48, rng, n_range=(12, 40),
+                                   log10_kappa_range=(1, 8))
+                + generate_sparse_set(16, rng, n_range=(12, 40)))
+    rng.shuffle(requests)
+    ids = [srv.submit(s) for s in requests]
+    srv.drain()
+    assert srv.pending == 0
+    responses = {i: srv.poll(i) for i in ids}
+    assert all(r is not None for r in responses.values())
+    assert len(responses) == 64 and len(completed) == 64
+
+    # (a) every response matches a direct gmres_ir solve of the same
+    # (padded system, action).
+    for i, s in zip(ids, requests):
+        r = responses[i]
+        _assert_matches_direct(r.record, s, SPACE.actions[r.action],
+                               bucket_step, bucket_step)
+        assert r.policy_version == "v0001"
+
+    # (b) the served Q-table learned online; the snapshot did not move.
+    assert not np.array_equal(srv.live.qtable.Q, q0)
+    assert np.array_equal(reg.load("v0001").qtable.Q, q0)
+
+    # Online updates == sequential oracle replay in completion order.
+    oracle = QTable(snap.qtable.n_states, snap.qtable.n_actions,
+                    OnlineConfig().alpha, seed=123)
+    oracle.Q = q0.copy()
+    oracle.N = snap.qtable.N.copy()
+    for r in completed:
+        oracle.update(r.state, r.action, r.reward)
+    assert np.array_equal(oracle.Q, srv.live.qtable.Q)
+    assert np.array_equal(oracle.N, srv.live.qtable.N)
+
+    # Telemetry saw the whole stream.
+    tel = srv.telemetry.snapshot()
+    assert tel["responses"] == 64 and tel["updates"] == 64
+    assert tel["solver_batches"] >= 64 // 4
+    assert tel["latency_s"]["p99"] >= tel["latency_s"]["p50"] >= 0
+
+    # Snapshotting the adapted policy bumps the registry.
+    v2 = srv.snapshot()
+    assert reg.current_version() == v2 == "v0002"
+    assert np.array_equal(reg.load().qtable.Q, srv.live.qtable.Q)
+
+
+def test_service_bench_emits_json_report(tmp_path, monkeypatch):
+    import benchmarks.common as bc
+    import benchmarks.service_bench as sb
+    monkeypatch.setattr(bc, "RESULTS_DIR", str(tmp_path))
+    rows = sb.run(recompute=True, n_requests=10, n_range=(12, 28),
+                  batches=(2,), episodes=3, n_train=6, bucket_step=16)
+    assert rows and rows[0].startswith("service/b2,")
+    report_path = tmp_path / "service_bench.json"
+    assert report_path.exists()
+    with open(report_path) as f:
+        report = json.load(f)
+    (setting,) = report["settings"]
+    assert setting["max_batch"] == 2
+    assert setting["n_requests"] == 10
+    assert setting["rps"] > 0
+    assert {"p50", "p90", "p99"} <= set(setting["latency_s"])
+    assert all(v >= 0 for v in setting["latency_s"].values())
