@@ -5,14 +5,21 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   table6  — penalty ablation (paper Table 6 + Fig. 4); shares solve caches
             with table2 via the env registry
   table4  — sparse SPD (paper Tables 3/4/5)
+  tasks   — per-TunableTask training throughput (GMRES-IR vs CG-IR
+            through the shared AutotuneEngine)
   service — online autotuning service: req/s + latency vs micro-batch size
   kernels — chop / qmatmul microbenchmarks
   roofline— summary rows from launch/dryrun artifacts, if present
+
+After the selected sections run, a top-level ``BENCH_results.json`` is
+written with the headline perf numbers (req/s + p50/p99 from the service
+bench, solves/s per task) so the trajectory accumulates across PRs.
 
 Flags: --full (paper-scale §5.1), --only <name>, --skip-solver.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 
@@ -25,6 +32,9 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_RESULTS_PATH = os.path.join(REPO_ROOT, "BENCH_results.json")
+
 _PRINTED = 0
 
 
@@ -33,6 +43,32 @@ def _flush(rows):
     for r in rows[_PRINTED:]:
         print(r, flush=True)
     _PRINTED = len(rows)
+
+
+def write_bench_results(path: str = BENCH_RESULTS_PATH) -> dict:
+    """Aggregate headline numbers from the per-section reports into one
+    top-level JSON (req/s, p50/p99, solves/s per task)."""
+    from benchmarks.common import load_report
+    summary = {"service": None, "tasks": {}}
+    service = load_report("service_bench")
+    if service:
+        summary["service"] = [
+            {"max_batch": s["max_batch"],
+             "rps": s["rps"],
+             "p50_s": s["latency_s"]["p50"],
+             "p99_s": s["latency_s"]["p99"],
+             "pad_waste_frac": s.get("pad_waste_frac")}
+            for s in service.get("settings", [])]
+    tasks = load_report("task_bench")
+    if tasks:
+        summary["tasks"] = {
+            t["task"]: {"solves_per_s": t["solves_per_s"],
+                        "n_solves": t["n_solves"],
+                        "reward_last": t["reward_last"]}
+            for t in tasks.get("tasks", [])}
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1, default=float)
+    return summary
 
 
 def main() -> None:
@@ -62,6 +98,10 @@ def main() -> None:
         from benchmarks import table4_sparse
         rows += table4_sparse.run(full=full)
         _flush(rows)
+    if want("tasks"):
+        from benchmarks import task_bench
+        rows += task_bench.run(full=full)
+        _flush(rows)
     if want("service"):
         from benchmarks import service_bench
         rows += service_bench.run(full=full)
@@ -74,6 +114,7 @@ def main() -> None:
         from benchmarks import roofline
         rows += roofline.run()
         _flush(rows)
+    write_bench_results()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,111 @@
+"""Per-task autotuning throughput: solves/s through the shared engine.
+
+Runs each registered `TunableTask` (GMRES-IR on dense randsvd, CG-IR on
+sparse SPD) through the same `train_policy` loop and reports unique
+solver rows per second plus training reward trajectory endpoints — the
+cross-algorithm perf row set that `BENCH_results.json` accumulates.
+
+CSV rows follow the `benchmarks/run.py` contract (name,us_per_call,
+derived) and the full report lands in benchmarks/results/task_bench.json.
+
+    PYTHONPATH=src python benchmarks/task_bench.py [--full] [--recompute]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):      # script entry: repo root onto sys.path
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+        __file__))))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import time
+
+import numpy as np
+
+from benchmarks.common import W1, load_report, save_report
+from repro.core import TrainConfig, reduced_action_space, train_policy
+from repro.core.engine import AutotuneEngine
+from repro.data import generate_dense_set, generate_sparse_set
+from repro.solvers import CGConfig, IRConfig
+from repro.tasks import CGIRTask, GMRESIRTask
+
+
+def _make_task(name: str, n_train: int, n_range, bucket_step: int,
+               seed: int):
+    space = reduced_action_space()
+    rng = np.random.default_rng(seed)
+    if name == "gmres_ir":
+        systems = generate_dense_set(n_train, rng, n_range)
+        return GMRESIRTask(systems, space, IRConfig(tau=1e-6),
+                           bucket_step=bucket_step, min_bucket=bucket_step)
+    if name == "cg_ir":
+        systems = generate_sparse_set(n_train, rng, n_range)
+        return CGIRTask(systems, space, CGConfig(tau=1e-6),
+                        bucket_step=bucket_step, min_bucket=bucket_step)
+    raise ValueError(name)
+
+
+def bench_task(name: str, n_train: int, n_range, episodes: int,
+               bucket_step: int, chunk: int, seed: int) -> dict:
+    task = _make_task(name, n_train, n_range, bucket_step, seed)
+    engine = AutotuneEngine(task, chunk=chunk, seed=seed)
+    # Warm-up: compile each bucket's executable outside the timed window.
+    engine.solve_pairs([(i, task.action_space.n_actions - 1)
+                        for i in range(len(task.instances))])
+    warm_solves, warm_pad = engine.n_solves, engine.n_pad_solves
+    t0 = time.perf_counter()
+    policy, hist = train_policy(engine, W1,
+                                TrainConfig(episodes=episodes, seed=seed))
+    wall = time.perf_counter() - t0
+    n_solves = engine.n_solves - warm_solves
+    return {
+        "task": name,
+        "n_train": n_train,
+        "episodes": episodes,
+        "wall_s": wall,
+        "n_solves": n_solves,
+        "n_pad_solves": engine.n_pad_solves - warm_pad,
+        "solves_per_s": n_solves / max(wall, 1e-9),
+        "reward_first": hist.episode_reward[0],
+        "reward_last": hist.episode_reward[-1],
+        "unique_solves": engine.cache_size,
+    }
+
+
+def run(full: bool = False, recompute: bool = False,
+        n_train: int = None, n_range: tuple = None,
+        episodes: int = None, bucket_step: int = 64,
+        chunk: int = 8, seed: int = 0) -> list:
+    cached = None if recompute else load_report("task_bench")
+    if cached is not None:
+        return emit_rows(cached)
+    n_train = n_train or (32 if full else 12)
+    n_range = n_range or ((100, 250) if full else (32, 96))
+    episodes = episodes or (40 if full else 10)
+    report = {"tasks": [bench_task(name, n_train, n_range, episodes,
+                                   bucket_step, chunk, seed)
+                        for name in ("gmres_ir", "cg_ir")]}
+    save_report("task_bench", report)
+    return emit_rows(report)
+
+
+def emit_rows(report: dict) -> list:
+    rows = []
+    for t in report["tasks"]:
+        us = 1e6 * t["wall_s"] / max(t["n_solves"], 1)
+        derived = (f"solves_per_s={t['solves_per_s']:.2f};"
+                   f"reward_last={t['reward_last']:.2f};"
+                   f"pad={t['n_pad_solves']}")
+        rows.append(f"task/{t['task']},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(full="--full" in sys.argv,
+                 recompute="--recompute" in sys.argv):
+        print(r)

@@ -1,4 +1,4 @@
-"""High-level training / evaluation API (paper Alg. 3).
+"""High-level training / evaluation API (paper Alg. 3), task-agnostic.
 
 `train_policy` is an *exact* implementation of Algorithm 3 — sequential
 per-instance epsilon-greedy selection and Q-updates — with a predictive
@@ -7,6 +7,10 @@ are pre-drawn and the greedy actions under the episode-start Q are
 pre-solved, so nearly every reward lookup hits the solve cache while the
 update order/semantics stay exactly the paper's. Intra-episode Q changes
 that flip an argmax fall back to an on-demand solve (rare).
+
+All entry points accept any `TunableTask` (GMRES-IR, CG-IR, ...) or an
+already-built `AutotuneEngine`; the legacy `GMRESIREnv` is an engine
+subclass, so existing call sites work unchanged.
 """
 from __future__ import annotations
 
@@ -16,12 +20,11 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.action_space import ActionSpace
-from repro.core.bandit import QTable, epsilon_schedule
-from repro.core.discretize import Discretizer
-from repro.core.env import GMRESIREnv
+from repro.core.bandit import epsilon_schedule
+from repro.core.engine import AutotuneEngine
 from repro.core.policy import PrecisionPolicy
 from repro.core.rewards import RewardConfig
+from repro.core.task import coerce_task
 from repro.solvers.metrics import summarize
 
 
@@ -42,68 +45,99 @@ class TrainHistory:
     epsilon: List[float] = dataclasses.field(default_factory=list)
     unique_solves: List[int] = dataclasses.field(default_factory=list)
     wall_time_s: float = 0.0
+    n_solves: int = 0        # real solver rows executed
+    n_pad_solves: int = 0    # fixed-chunk padding waste
 
 
-def train_policy(env: GMRESIREnv, reward_cfg: RewardConfig,
+def as_engine(task_or_engine) -> AutotuneEngine:
+    """Coerce a TunableTask (or legacy config object) into an engine;
+    pass engines (incl. the `GMRESIREnv` shim) through untouched."""
+    if isinstance(task_or_engine, AutotuneEngine):
+        return task_or_engine
+    return AutotuneEngine(coerce_task(task_or_engine))
+
+
+def train_policy(task, reward_cfg: RewardConfig,
                  cfg: TrainConfig = TrainConfig()) -> tuple:
-    """Algorithm 3 on the environment's training systems."""
+    """Algorithm 3 on the task's training instances."""
     t0 = time.time()
-    n_sys = len(env.systems)
-    disc = Discretizer.fit(env.features, cfg.n_bins)
-    states = np.asarray(disc(env.features))
-    qt = QTable(disc.n_states, env.action_space.n_actions, cfg.alpha,
-                cfg.seed)
+    engine = as_engine(task)
+    n_sys = len(engine.instances)
+    policy = engine.fit_policy(cfg.n_bins, cfg.alpha, cfg.seed)
+    states = np.asarray(policy.discretizer(engine.features))
     rng = np.random.default_rng(cfg.seed + 1)
     hist = TrainHistory()
 
     if cfg.prefill:
-        env.prefill_all()
+        engine.prefill_all()
 
     for t in range(cfg.episodes):
         eps = epsilon_schedule(t, cfg.episodes, cfg.eps_min)
         coins = rng.random(n_sys) < eps
-        rand_a = rng.integers(env.action_space.n_actions, size=n_sys)
+        rand_a = rng.integers(engine.action_space.n_actions, size=n_sys)
         # Predictive prefetch: random picks + episode-start greedy picks.
         prefetch = [(i, int(rand_a[i])) for i in range(n_sys) if coins[i]]
-        prefetch += [(i, qt.greedy(int(states[i]))) for i in range(n_sys)
-                     if not coins[i]]
-        env.solve_pairs(prefetch)
+        prefetch += [(i, engine.greedy(int(states[i])))
+                     for i in range(n_sys) if not coins[i]]
+        engine.solve_pairs(prefetch)
 
         ep_rewards, ep_rpes = [], []
         for i in range(n_sys):                      # Alg. 3 lines 6-21
             s = int(states[i])
-            a = int(rand_a[i]) if coins[i] else qt.greedy(s)
-            r = env.reward(i, a, reward_cfg)
-            rpe = qt.update(s, a, r)
+            a, _ = engine.select(s, eps, explore=bool(coins[i]),
+                                 rand_action=int(rand_a[i]))
+            r = engine.reward(i, a, reward_cfg)
+            rpe = engine.update(s, a, r)
             ep_rewards.append(r)
             ep_rpes.append(abs(rpe))
         hist.episode_reward.append(float(np.mean(ep_rewards)))
         hist.episode_rpe.append(float(np.mean(ep_rpes)))
         hist.epsilon.append(eps)
-        hist.unique_solves.append(env.cache_size)
+        hist.unique_solves.append(engine.cache_size)
 
     hist.wall_time_s = time.time() - t0
-    policy = PrecisionPolicy(env.action_space, disc, qt)
+    hist.n_solves = engine.n_solves
+    hist.n_pad_solves = engine.n_pad_solves
     return policy, hist
 
 
-def evaluate_policy(policy: PrecisionPolicy, env: GMRESIREnv,
-                    tau_base: float) -> Dict:
-    """Greedy inference (Alg. 3 line 23) over the env's systems, summarized
-    per condition range (paper table columns)."""
-    n_sys = len(env.systems)
+def _collect(engine: AutotuneEngine, picks):
+    """Metric arrays for a list of (instance, action) picks.
+
+    The evaluation drivers (unlike training) summarize per condition
+    range, so they require linear-system-style tasks: outcomes carrying
+    "ferr"/"nbe"/"n_outer" (+ the task's `inner_iter_metric`) and a
+    `kappas` attribute on the task. Custom tasks without these should
+    summarize their own outcomes via `engine.outcome`.
+    """
+    if getattr(engine.task, "kappas", None) is None:
+        raise TypeError(
+            f"task {getattr(engine.task, 'name', type(engine.task).__name__)!r}"
+            " has no `kappas`; evaluate_policy/evaluate_fixed_action only "
+            "summarize linear-system tasks — collect outcomes via "
+            "AutotuneEngine.outcome for custom tasks")
+    outs = [engine.outcome(i, a) for i, a in picks]
+    inner_key = getattr(engine.task, "inner_iter_metric", "n_gmres")
+    ferr = np.array([o.metrics["ferr"] for o in outs])
+    nbe = np.array([o.metrics["nbe"] for o in outs])
+    n_outer = np.array([o.metrics["n_outer"] for o in outs])
+    n_inner = np.array([o.metrics[inner_key] for o in outs])
+    return ferr, nbe, n_outer, n_inner
+
+
+def evaluate_policy(policy: PrecisionPolicy, task, tau_base: float) -> Dict:
+    """Greedy inference (Alg. 3 line 23) over the task's instances,
+    summarized per condition range (paper table columns)."""
+    engine = as_engine(task)
+    n_sys = len(engine.instances)
     picks = []
     for i in range(n_sys):
-        a, _ = policy.predict(env.features[i])
+        a, _ = policy.predict(engine.features[i])
         picks.append((i, a))
-    env.solve_pairs(picks)
-    recs = [env.record(i, a) for i, a in picks]
-    ferr = np.array([r.ferr for r in recs])
-    nbe = np.array([r.nbe for r in recs])
-    n_outer = np.array([r.n_outer for r in recs])
-    n_gmres = np.array([r.n_gmres for r in recs])
-    kappa = env.kappas
-    table = summarize(ferr, nbe, n_outer, n_gmres, kappa, tau_base)
+    engine.solve_pairs(picks)
+    ferr, nbe, n_outer, n_inner = _collect(engine, picks)
+    kappa = engine.kappas
+    table = summarize(ferr, nbe, n_outer, n_inner, kappa, tau_base)
     # Per-step precision usage frequencies (paper Fig. 2 / Table 5).
     usage = np.zeros((len(policy.action_space.ladder),))
     per_range_usage = {}
@@ -128,23 +162,21 @@ def evaluate_policy(policy: PrecisionPolicy, env: GMRESIREnv,
         "table": table,
         "actions": picks,
         "ferr": ferr, "nbe": nbe,
-        "n_outer": n_outer, "n_gmres": n_gmres,
+        "n_outer": n_outer, "n_inner": n_inner,
+        # legacy alias (pre-TunableTask callers read the GMRES name)
+        "n_gmres": n_inner,
         "usage_per_solve": dict(zip(names, (usage / n_sys).round(3).tolist())),
         "usage_per_range": per_range_usage,
     }
 
 
-def evaluate_fixed_action(env: GMRESIREnv, action_idx: int,
-                          tau_base: float) -> Dict:
+def evaluate_fixed_action(task, action_idx: int, tau_base: float) -> Dict:
     """Baseline evaluation (e.g. the all-FP64 action)."""
-    picks = [(i, action_idx) for i in range(len(env.systems))]
-    env.solve_pairs(picks)
-    recs = [env.record(i, a) for i, a in picks]
-    ferr = np.array([r.ferr for r in recs])
-    nbe = np.array([r.nbe for r in recs])
-    n_outer = np.array([r.n_outer for r in recs])
-    n_gmres = np.array([r.n_gmres for r in recs])
-    return {"table": summarize(ferr, nbe, n_outer, n_gmres, env.kappas,
+    engine = as_engine(task)
+    picks = [(i, action_idx) for i in range(len(engine.instances))]
+    engine.solve_pairs(picks)
+    ferr, nbe, n_outer, n_inner = _collect(engine, picks)
+    return {"table": summarize(ferr, nbe, n_outer, n_inner, engine.kappas,
                                tau_base),
             "ferr": ferr, "nbe": nbe, "n_outer": n_outer,
-            "n_gmres": n_gmres}
+            "n_inner": n_inner, "n_gmres": n_inner}

@@ -1,13 +1,18 @@
 """Shared size-bucketing / padding / fixed-shape batch-solve layer.
 
-Both the offline training environment (`core.env.GMRESIREnv`) and the online
-serving micro-batcher (`service.batcher.MicroBatcher`) funnel solves through
-this module: systems are identity-padded to a size bucket (solution
-preserving, see `data.matrices.pad_system`), stacked into fixed-shape
-(chunk, n_pad, n_pad) batches — short batches are padded by repeating row
-0 — and executed with one `gmres_ir_batch` call. Because every batch for a
-given (bucket, chunk) pair has the same shape, XLA compiles each bucket
-exactly once per process, no matter how many batches flow through it.
+The GMRES-IR task (`tasks.gmres_ir.GMRESIRTask`, and through it both the
+offline `AutotuneEngine` and the online serving micro-batcher) funnels
+solves through this module: systems are identity-padded to a size bucket
+(solution preserving, see `data.matrices.pad_system`), stacked into
+fixed-shape (chunk, n_pad, n_pad) batches — short batches are padded by
+repeating row 0 — and executed with one `gmres_ir_batch` call. Because
+every batch for a given (bucket, chunk) pair has the same shape, XLA
+compiles each bucket exactly once per process, no matter how many
+batches flow through it.
+
+`bucket_of` itself lives in the solver-free `core.task` module (the
+engine buckets work without knowing any solver) and is re-exported here
+for backward compatibility.
 """
 from __future__ import annotations
 
@@ -17,18 +22,17 @@ from typing import List, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.task import bucket_of
 from repro.data.matrices import LinearSystem, pad_system
 from repro.solvers.ir import IRConfig, gmres_ir_batch
 
-
-def bucket_of(n: int, step: int = 128, minimum: int = 128) -> int:
-    """Smallest multiple of `step` (floored at `minimum`) that holds n."""
-    return max(minimum, ((n + step - 1) // step) * step)
+__all__ = ["SolveRecord", "bucket_of", "pad_to_bucket",
+           "records_from_stats", "solve_fixed_batch"]
 
 
 @dataclasses.dataclass
 class SolveRecord:
-    """Host-side scalar outcome of one (system, action) solve."""
+    """Host-side scalar outcome of one (system, action) GMRES-IR solve."""
     ferr: float
     nbe: float
     n_outer: int
@@ -67,13 +71,9 @@ def solve_fixed_batch(A_rows: Sequence[np.ndarray],
     to exactly `chunk` rows by repeating row 0, keeping the compiled shape
     constant. Returns one SolveRecord per *input* row (pad rows dropped).
     """
-    k = len(A_rows)
-    assert 0 < k <= chunk, (k, chunk)
-    idx = list(range(k)) + [0] * (chunk - k)
-    A = np.stack([A_rows[i] for i in idx])
-    b = np.stack([b_rows[i] for i in idx])
-    x = np.stack([x_rows[i] for i in idx])
-    acts = np.stack([np.asarray(action_rows[i]) for i in idx])
+    from repro.tasks.base import stack_fixed
+    A, b, x, acts, k = stack_fixed(list(zip(A_rows, b_rows, x_rows)),
+                                   action_rows, chunk)
     stats = gmres_ir_batch(jnp.asarray(A), jnp.asarray(b), jnp.asarray(x),
                            jnp.asarray(acts, jnp.int32), ir_cfg)
     return records_from_stats(stats, k)

@@ -36,13 +36,20 @@ class Discretizer:
         return int(np.prod(self.n_bins))
 
     def bin_indices(self, s: np.ndarray) -> np.ndarray:
-        """Per-feature bin index, clipped to [0, n_j - 1]."""
+        """Per-feature bin index, clipped to [0, n_j - 1].
+
+        Degenerate features (mins == maxs: a single training instance, or
+        a constant feature column) get a well-defined single-bin mapping —
+        every query value lands in bin 0, rather than the arbitrary bin
+        that floor((v - min) / 1.0 * n) would pick for off-point queries.
+        """
         s = np.atleast_2d(np.asarray(s, dtype=np.float64))
-        width = np.where(self.maxs > self.mins,
-                         (self.maxs - self.mins), 1.0)
+        degenerate = self.maxs <= self.mins
+        width = np.where(degenerate, 1.0, self.maxs - self.mins)
         frac = (s - self.mins) / width
         nb = np.asarray(self.n_bins)
         idx = np.floor(frac * nb).astype(np.int64)
+        idx = np.where(degenerate[None, :], 0, idx)
         return np.clip(idx, 0, nb - 1)
 
     def __call__(self, s: np.ndarray) -> np.ndarray:

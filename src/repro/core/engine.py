@@ -1,0 +1,180 @@
+"""The single autotuning engine shared by offline training and online
+serving.
+
+`AutotuneEngine` owns the three things every bandit-autotuning loop
+needs, for any `TunableTask`:
+
+  * the **solve cache** — deterministic tasks make (instance, action)
+    outcomes reusable; cache misses are batched per shape bucket into
+    fixed-`chunk` calls to `task.solve_rows` (one compile per bucket),
+  * **epsilon-greedy selection** — by discretized state (offline Alg. 3,
+    with pre-drawn coins for predictive prefetching) or by raw features
+    (online serving, with the nearest-visited-bin greedy fallback),
+  * **Q-updates** — the Eq. 6 incremental update against the attached
+    policy's Q-table, returning the reward-prediction error.
+
+The engine never imports a solver: everything algorithm-specific flows
+through the task's `solve_rows` / `reward` hooks. `core.autotune`
+(offline) and `service.server` (online) are both thin drivers over this
+class, so the learning loop exists exactly once.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bandit import QTable
+from repro.core.discretize import Discretizer
+from repro.core.policy import PrecisionPolicy
+from repro.core.task import Outcome, TunableTask
+
+
+class AutotuneEngine:
+    def __init__(self, task: TunableTask, reward_cfg=None,
+                 chunk: int = 32, seed: int = 0,
+                 policy: Optional[PrecisionPolicy] = None):
+        self.task = task
+        self.reward_cfg = reward_cfg
+        self.chunk = chunk
+        self.policy = policy
+        self._rng = np.random.default_rng(seed)
+        self._prepared: Dict[int, object] = {}   # instance idx -> rows
+        self._cache: Dict[Tuple[int, int], Outcome] = {}
+        self.n_solves = 0       # real solver rows (satellite: no pad rows)
+        self.n_pad_solves = 0   # wasted rows from fixed-chunk padding
+        self.n_requests = 0     # reward lookups
+
+    # -- task facade -------------------------------------------------------
+    @property
+    def instances(self):
+        return self.task.instances
+
+    @property
+    def features(self) -> np.ndarray:
+        return self.task.features
+
+    @property
+    def action_space(self):
+        return self.task.action_space
+
+    @property
+    def kappas(self):
+        """Condition estimates when the task provides them (linear-system
+        tasks do); None otherwise."""
+        return getattr(self.task, "kappas", None)
+
+    # -- solve cache -------------------------------------------------------
+    def _prep(self, i: int):
+        if i not in self._prepared:
+            self._prepared[i] = self.task.prepare(self.task.instances[i])
+        return self._prepared[i]
+
+    def solve_pairs(self, pairs: Iterable[Tuple[int, int]]) -> None:
+        """Batch-solve all uncached (instance, action) pairs."""
+        miss = sorted({(int(i), int(a)) for i, a in pairs
+                       if (int(i), int(a)) not in self._cache})
+        if not miss:
+            return
+        by_bucket: Dict[int, List[Tuple[int, int]]] = {}
+        for p in miss:
+            key = self.task.bucket_key(self.task.instances[p[0]])
+            by_bucket.setdefault(key, []).append(p)
+        for _, plist in sorted(by_bucket.items()):
+            for c0 in range(0, len(plist), self.chunk):
+                chunk_pairs = plist[c0:c0 + self.chunk]
+                outs = self.task.solve_rows(
+                    [self._prep(i) for i, _ in chunk_pairs],
+                    [self.action_space.actions[a] for _, a in chunk_pairs],
+                    self.chunk)
+                self.n_solves += len(chunk_pairs)
+                self.n_pad_solves += self.chunk - len(chunk_pairs)
+                for p, out in zip(chunk_pairs, outs):
+                    self._cache[p] = out
+
+    def outcome(self, i: int, a: int) -> Outcome:
+        if (i, a) not in self._cache:
+            self.solve_pairs([(i, a)])
+        return self._cache[(i, a)]
+
+    def reward_for(self, outcome: Outcome, action_idx: int, instance,
+                   cfg=None) -> float:
+        """Task reward for an already-observed outcome (online path)."""
+        cfg = cfg if cfg is not None else self.reward_cfg
+        return self.task.reward(outcome, int(action_idx), instance, cfg)
+
+    def reward(self, i: int, a: int, cfg=None) -> float:
+        """Reward for applying action `a` to instance `i` (offline path)."""
+        self.n_requests += 1
+        return self.reward_for(self.outcome(i, a), a,
+                               self.task.instances[i], cfg)
+
+    def prefill_all(self) -> None:
+        """Exhaustive (instance x action) sweep — the multi-pod work grid."""
+        self.solve_pairs([(i, a) for i in range(len(self.task.instances))
+                          for a in range(self.action_space.n_actions)])
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+    def summarize(self) -> Dict[str, int]:
+        """Solver-work accounting: real rows vs fixed-shape padding waste."""
+        return {"n_solves": self.n_solves,
+                "n_pad_solves": self.n_pad_solves,
+                "n_requests": self.n_requests,
+                "cache_size": self.cache_size}
+
+    # -- selection + learning ---------------------------------------------
+    def fit_policy(self, n_bins, alpha=0.5, seed: int = 0
+                   ) -> PrecisionPolicy:
+        """Fresh policy: discretizer fit on the task's feature matrix plus
+        an all-zero Q-table. Attached as this engine's live policy."""
+        disc = Discretizer.fit(self.features, n_bins)
+        qt = QTable(disc.n_states, self.action_space.n_actions, alpha, seed)
+        self.policy = PrecisionPolicy(self.action_space, disc, qt)
+        return self.policy
+
+    @property
+    def qtable(self) -> QTable:
+        return self.policy.qtable
+
+    def greedy(self, state: int) -> int:
+        return self.policy.qtable.greedy(int(state))
+
+    def select(self, state: int, eps: float, *, explore: Optional[bool]
+               = None, rand_action: Optional[int] = None
+               ) -> Tuple[int, bool]:
+        """Epsilon-greedy by discretized state.
+
+        `explore`/`rand_action` may be pre-drawn by the caller (the
+        offline trainer draws them at episode start so greedy picks can
+        be prefetched in one batched solve); left None, the engine's own
+        rng draws them.
+        """
+        if explore is None:
+            explore = bool(self._rng.random() < eps)
+        if explore:
+            action = (int(rand_action) if rand_action is not None else
+                      int(self._rng.integers(self.action_space.n_actions)))
+        else:
+            action = self.greedy(state)
+        return action, bool(explore)
+
+    def select_for_features(self, features: np.ndarray, eps: float
+                            ) -> Tuple[int, int, bool]:
+        """(state, action, explore) from raw features: the online path.
+        Greedy picks go through `PrecisionPolicy.predict`, i.e. the
+        nearest-visited-bin fallback (Prop. 1)."""
+        state = self.policy.state_of(features)
+        explore = bool(self._rng.random() < eps)
+        if explore:
+            action = int(self._rng.integers(self.action_space.n_actions))
+        else:
+            action, _ = self.policy.predict(features)
+        return state, int(action), explore
+
+    def update(self, state: int, action: int, r: float) -> float:
+        """Eq. 6 Q-update; returns the pre-update reward-prediction
+        error."""
+        return self.policy.qtable.update(int(state), int(action), float(r))

@@ -1,89 +1,47 @@
-"""Deterministic GMRES-IR environment with batched, memoized solves.
+"""Deprecated GMRES-IR environment — thin shim over the TunableTask API.
 
-The environment is a pure function of (system, action): rewards carry no
-noise beyond the solver itself, so every solve is cached and each episode
-sweep batches its cache misses into fixed-shape vmapped `gmres_ir_batch`
-calls (one compile per size bucket). This is the framework-scale reading of
-the paper: the env evaluation is the compute-heavy, embarrassingly-parallel
-part — it batches over instances on one host and shards over the (instance x
-action) grid across pods — while the bandit update itself is trivial.
+`GMRESIREnv` predates the solver-agnostic redesign: it was a GMRES-only
+fusion of what is now `tasks.gmres_ir.GMRESIRTask` (the algorithm) and
+`core.engine.AutotuneEngine` (the cache + learning loop). It survives as
+an engine subclass so historical call sites — `GMRESIREnv(systems,
+space, ir_cfg)` into `train_policy` / `PolicyRegistry.warm_start` — keep
+working bit-for-bit. New code should build a task directly:
+
+    task = GMRESIRTask(systems, space, ir_cfg)       # repro.tasks
+    policy, hist = train_policy(task, reward_cfg)    # same trainer
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Sequence, Tuple
-
-import numpy as np
+from typing import Sequence
 
 from repro.core.action_space import ActionSpace
-from repro.core.batching import (SolveRecord, bucket_of, solve_fixed_batch)
-from repro.core.features import feature_vector
-from repro.core.rewards import RewardConfig, reward as reward_fn
-from repro.data.matrices import LinearSystem, pad_system
-from repro.solvers.ir import IRConfig
+from repro.core.engine import AutotuneEngine
+from repro.core.rewards import RewardConfig
+from repro.core.task import Outcome
+from repro.data.matrices import LinearSystem
 
 
-class GMRESIREnv:
+class GMRESIREnv(AutotuneEngine):
     def __init__(self, systems: Sequence[LinearSystem],
-                 action_space: ActionSpace, ir_cfg: IRConfig,
+                 action_space: ActionSpace, ir_cfg,
                  chunk: int = 32, bucket_step: int = 128):
-        self.systems = list(systems)
-        self.action_space = action_space
+        # Deferred import keeps `repro.core` importable before
+        # `repro.tasks` finishes initializing (and vice versa).
+        from repro.tasks.gmres_ir import GMRESIRTask
+        task = GMRESIRTask(systems, action_space, ir_cfg,
+                           bucket_step=bucket_step)
+        super().__init__(task, chunk=chunk)
         self.ir_cfg = ir_cfg
-        self.chunk = chunk
-        self.kappas = np.array([s.features["kappa_est"] for s in systems])
-        self.features = np.stack([feature_vector(s.features)
-                                  for s in systems])
-        self._buckets = [bucket_of(s.n, bucket_step) for s in systems]
-        self._padded = {}      # sys_idx -> (A, b, x) padded numpy
-        self._cache: Dict[Tuple[int, int], SolveRecord] = {}
-        self.n_solves = 0      # actual solver invocations (incl. chunk pad)
-        self.n_requests = 0    # reward lookups
 
-    # ------------------------------------------------------------------ --
-    def _get_padded(self, i: int):
-        if i not in self._padded:
-            self._padded[i] = pad_system(self.systems[i], self._buckets[i])
-        return self._padded[i]
+    # -- legacy accessors --------------------------------------------------
+    @property
+    def systems(self):
+        return self.task.instances
 
-    def solve_pairs(self, pairs: Iterable[Tuple[int, int]]) -> None:
-        """Batch-solve all uncached (system, action) pairs."""
-        miss = sorted({p for p in pairs if p not in self._cache})
-        if not miss:
-            return
-        by_bucket: Dict[int, List[Tuple[int, int]]] = {}
-        for p in miss:
-            by_bucket.setdefault(self._buckets[p[0]], []).append(p)
-        for bucket, plist in by_bucket.items():
-            for c0 in range(0, len(plist), self.chunk):
-                chunk_pairs = plist[c0:c0 + self.chunk]
-                recs = solve_fixed_batch(
-                    [self._get_padded(i)[0] for i, _ in chunk_pairs],
-                    [self._get_padded(i)[1] for i, _ in chunk_pairs],
-                    [self._get_padded(i)[2] for i, _ in chunk_pairs],
-                    [self.action_space.actions[a] for _, a in chunk_pairs],
-                    self.ir_cfg, self.chunk)
-                self.n_solves += self.chunk
-                for p, rec in zip(chunk_pairs, recs):
-                    self._cache[p] = rec
-
-    def record(self, i: int, a: int) -> SolveRecord:
-        if (i, a) not in self._cache:
-            self.solve_pairs([(i, a)])
-        return self._cache[(i, a)]
+    def record(self, i: int, a: int) -> Outcome:
+        """Legacy name for `outcome` (the Outcome's metrics are readable
+        as attributes, matching the old SolveRecord fields)."""
+        return self.outcome(i, a)
 
     def reward(self, i: int, a: int, cfg: RewardConfig) -> float:
-        """Eq. 21 reward for applying action a to system i."""
-        self.n_requests += 1
-        rec = self.record(i, a)
-        return reward_fn(rec.ferr, rec.nbe, rec.n_gmres, rec.status,
-                         self.action_space.actions[a], self.kappas[i], cfg)
-
-    def prefill_all(self) -> None:
-        """Exhaustive (instance x action) sweep — the multi-pod work grid."""
-        pairs = [(i, a) for i in range(len(self.systems))
-                 for a in range(self.action_space.n_actions)]
-        self.solve_pairs(pairs)
-
-    @property
-    def cache_size(self) -> int:
-        return len(self._cache)
+        return super().reward(i, a, cfg)

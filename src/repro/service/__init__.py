@@ -1,11 +1,13 @@
-"""Online precision-autotuning service.
+"""Online precision-autotuning service, solver-agnostic.
 
-Streaming counterpart of `core.autotune`: accepts `Ax = b` solve requests,
-picks per-step precisions with the live bandit policy, executes through
-size-bucketed fixed-shape micro-batches (one compiled solver per bucket),
-and keeps learning from every observed reward — continual epsilon control,
+Streaming counterpart of `core.autotune`: accepts solve requests for any
+hosted `TunableTask` (GMRES-IR, CG-IR, ...), picks per-step precisions
+with the live bandit policy, executes through per-bucket fixed-shape
+micro-batches (one compiled executable per task bucket), and keeps
+learning from every observed reward — continual epsilon control,
 EWMA-|RPE| drift detection, and versioned policy snapshots with atomic
-promote/rollback.
+promote/rollback. All algorithm-specific behavior flows through the
+task's `TunableTask` hooks; the server and batcher import no solver.
 """
 from .batcher import BatcherConfig, FlushResult, MicroBatcher
 from .online import (DriftDetector, EpsilonController, OnlineConfig,

@@ -1,12 +1,19 @@
-"""Per-bucket micro-batcher for streaming solve requests.
+"""Per-bucket micro-batcher for streaming solve requests, task-agnostic.
 
-Requests are identity-padded to their size bucket on submit and queued per
-bucket. A bucket flushes when it holds `max_batch` requests (full batch) or
-when its oldest request has waited `max_wait_s` (partial batch, padded by
-repeating row 0 — see `core.batching.solve_fixed_batch`). Every flush for a
-given bucket therefore has the identical (max_batch, n_pad, n_pad) shape,
-so XLA compiles one `gmres_ir_batch` executable per bucket per process and
-every subsequent flush is compile-free.
+Requests are prepared (e.g. identity-padded to their size bucket) by the
+task on submit and queued per bucket key. A bucket flushes when it holds
+`max_batch` requests (full batch) or when its oldest request has waited
+`max_wait_s` (partial batch, padded to the fixed shape by the task's
+`solve_rows`). Every flush for a given bucket therefore has an identical
+compiled shape, so XLA compiles one executable per (task, bucket) per
+process and every subsequent flush is compile-free.
+
+The batcher knows nothing about any solver: all shape/batch semantics
+flow through the `TunableTask` hooks (`bucket_key`, `prepare`,
+`solve_rows`). Passing a legacy `IRConfig` (or `CGConfig`) instead of a
+task still works — `core.task.coerce_task` wraps it, honoring this
+batcher's `bucket_step`/`min_bucket`; a real task uses its own bucket
+configuration.
 
 Single-threaded by design: `pump()` is driven by the server's event loop
 (or a test), and the clock is injectable so flush-by-timeout is exactly
@@ -21,25 +28,21 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.batching import SolveRecord, bucket_of, solve_fixed_batch
-from repro.data.matrices import LinearSystem, pad_system
-from repro.solvers.ir import IRConfig
+from repro.core.task import Outcome, TunableTask, coerce_task
 
 
 @dataclasses.dataclass(frozen=True)
 class BatcherConfig:
     max_batch: int = 8          # rows per compiled batch (flush when full)
     max_wait_s: float = 0.05    # oldest-request deadline for partial flush
-    bucket_step: int = 128
+    bucket_step: int = 128      # used when adapting a legacy solver config
     min_bucket: int = 128
 
 
 @dataclasses.dataclass
 class _Pending:
     req_id: int
-    A: np.ndarray               # padded rows
-    b: np.ndarray
-    x: np.ndarray
+    rows: object                # task-prepared (padded) row data
     action_row: np.ndarray
     enqueued_at: float
     bucket: int
@@ -49,31 +52,32 @@ class _Pending:
 class FlushResult:
     bucket: int
     req_ids: List[int]
-    records: List[SolveRecord]
+    records: List[Outcome]
     n_rows: int                 # rows solved (== max_batch, incl. padding)
 
 
 class MicroBatcher:
-    def __init__(self, ir_cfg: IRConfig,
+    def __init__(self, task: TunableTask,
                  cfg: BatcherConfig = BatcherConfig(),
                  clock: Callable[[], float] = time.monotonic):
-        self.ir_cfg = ir_cfg
+        self.task = coerce_task(task, bucket_step=cfg.bucket_step,
+                                min_bucket=cfg.min_bucket)
         self.cfg = cfg
         self.clock = clock
         self._queues: Dict[int, List[_Pending]] = {}
         self._ids = itertools.count()
 
     # -- enqueue -----------------------------------------------------------
-    def submit(self, system: LinearSystem, action_row: np.ndarray,
+    def submit(self, instance, action_row: np.ndarray,
                req_id: Optional[int] = None) -> Tuple[int, int]:
-        """Queue one (system, action) solve; returns (request id, bucket)."""
+        """Queue one (instance, action) solve; returns (request id,
+        bucket)."""
         if req_id is None:
             req_id = next(self._ids)
-        bucket = bucket_of(system.n, self.cfg.bucket_step,
-                           self.cfg.min_bucket)
-        A, b, x = pad_system(system, bucket)
+        bucket = self.task.bucket_key(instance)
+        rows = self.task.prepare(instance)
         self._queues.setdefault(bucket, []).append(
-            _Pending(req_id, A, b, x, np.asarray(action_row, np.int32),
+            _Pending(req_id, rows, np.asarray(action_row, np.int32),
                      self.clock(), bucket))
         return req_id, bucket
 
@@ -84,10 +88,9 @@ class MicroBatcher:
 
     def _flush_bucket(self, bucket: int, entries: List[_Pending]
                       ) -> FlushResult:
-        records = solve_fixed_batch(
-            [e.A for e in entries], [e.b for e in entries],
-            [e.x for e in entries], [e.action_row for e in entries],
-            self.ir_cfg, self.cfg.max_batch)
+        records = self.task.solve_rows(
+            [e.rows for e in entries], [e.action_row for e in entries],
+            self.cfg.max_batch)
         return FlushResult(bucket, [e.req_id for e in entries], records,
                            self.cfg.max_batch)
 

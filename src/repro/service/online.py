@@ -120,10 +120,15 @@ class OnlineUpdate:
 
 
 class OnlineLearner:
-    """Epsilon-greedy selection + incremental Q-updates on a live QTable."""
+    """Continual-learning wrapper: epsilon control + drift detection on
+    top of the single Q-update primitive.
 
-    def __init__(self, qtable: QTable, cfg: OnlineConfig = OnlineConfig()):
-        self.qtable = qtable
+    Accepts the live `QTable` directly, or anything exposing one via a
+    `.qtable` attribute (an `AutotuneEngine` or `PrecisionPolicy`), so
+    the server can hand it the shared engine."""
+
+    def __init__(self, qtable, cfg: OnlineConfig = OnlineConfig()):
+        self.qtable: QTable = getattr(qtable, "qtable", qtable)
         self.cfg = cfg
         self.epsilon = EpsilonController(cfg)
         self.drift = DriftDetector(cfg)

@@ -21,7 +21,6 @@ import time
 from typing import List, Optional, Tuple
 
 from repro.core.autotune import TrainConfig, train_policy
-from repro.core.env import GMRESIREnv
 from repro.core.policy import PrecisionPolicy
 from repro.core.rewards import RewardConfig
 
@@ -130,13 +129,15 @@ class PolicyRegistry:
 
     # -- bootstrap ---------------------------------------------------------
     @classmethod
-    def warm_start(cls, root: str, env: GMRESIREnv,
+    def warm_start(cls, root: str, task,
                    reward_cfg: RewardConfig,
                    train_cfg: TrainConfig = TrainConfig()
                    ) -> Tuple["PolicyRegistry", str, PrecisionPolicy]:
-        """Offline `train_policy` run -> published + promoted version 1."""
+        """Offline `train_policy` run -> published + promoted version 1.
+
+        `task` is any `TunableTask` (or engine / legacy `GMRESIREnv`)."""
         reg = cls(root)
-        policy, hist = train_policy(env, reward_cfg, train_cfg)
+        policy, hist = train_policy(task, reward_cfg, train_cfg)
         version = reg.publish(
             policy, note="warm start (offline train_policy)",
             extra_meta={"episodes": train_cfg.episodes,

@@ -1,22 +1,25 @@
-"""Streaming precision-autotuning server.
+"""Streaming autotuning server — one server, any `TunableTask`.
 
 Lifecycle of one request (all single-threaded, pump-driven):
 
-  submit(system) ── feature extraction (already attached to the
-      LinearSystem at ingest) → state via the snapshot Discretizer →
-      epsilon-greedy action from the *live* Q-table (greedy side goes
-      through PrecisionPolicy's nearest-visited-bin fallback) → enqueued
-      in the per-bucket micro-batcher.
+  submit(instance) ── context features via the task's `feature_of` →
+      epsilon-greedy action from the *live* policy through the shared
+      `AutotuneEngine` (greedy side goes through PrecisionPolicy's
+      nearest-visited-bin fallback) → enqueued in the per-bucket
+      micro-batcher, which delegates all shape/solve semantics to the
+      task.
 
   step() ── flushes due buckets (full batch or deadline), and for every
-      solved row: Eq. 21 reward from the observed SolveRecord → online
+      solved row: task reward from the observed `Outcome` → online
       Q-update (continual epsilon + drift detection, service.online) →
-      telemetry → a SolveRecord-carrying response retrievable via poll().
+      telemetry → an Outcome-carrying response retrievable via poll().
 
-The live Q-table starts as a copy of the promoted registry snapshot, so
-the snapshot stays immutable; `snapshot()` publishes the live state back
-as a new version (and promotes it) — crash recovery is just "reload
-CURRENT".
+The server contains no algorithm-specific code: GMRES-IR, CG-IR, or any
+user task is hosted identically (legacy solver configs are adapted via
+`core.task.coerce_task`). The live Q-table starts as a copy of the
+promoted registry snapshot, so the snapshot stays immutable;
+`snapshot()` publishes the live state back as a new version (and
+promotes it) — crash recovery is just "reload CURRENT".
 """
 from __future__ import annotations
 
@@ -26,14 +29,11 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.action_space import ActionSpace
 from repro.core.bandit import QTable
-from repro.core.batching import SolveRecord
-from repro.core.features import feature_vector
+from repro.core.engine import AutotuneEngine
 from repro.core.policy import PrecisionPolicy
-from repro.core.rewards import RewardConfig, reward as reward_fn
-from repro.data.matrices import LinearSystem
-from repro.solvers.ir import IRConfig
+from repro.core.rewards import RewardConfig
+from repro.core.task import Outcome, coerce_task
 from repro.service.batcher import BatcherConfig, MicroBatcher
 from repro.service.online import OnlineConfig, OnlineLearner
 from repro.service.registry import PolicyRegistry
@@ -44,8 +44,8 @@ from repro.service.telemetry import Telemetry
 class SolveResponse:
     request_id: int
     action: int                      # index into the action space
-    action_names: Tuple[str, ...]    # (u_f, u, u_g, u_r) format names
-    record: SolveRecord
+    action_names: Tuple[str, ...]    # per-step format names
+    record: Outcome
     reward: float
     state: int
     eps: float                       # epsilon in force when selected
@@ -57,7 +57,7 @@ class SolveResponse:
 
 @dataclasses.dataclass
 class _InFlight:
-    system: LinearSystem
+    instance: object
     state: int
     action: int
     eps: float
@@ -76,7 +76,7 @@ def _live_qtable(snapshot: QTable, alpha, seed: int) -> QTable:
 class AutotuneServer:
     def __init__(self,
                  registry: Union[PolicyRegistry, PrecisionPolicy],
-                 ir_cfg: IRConfig = IRConfig(),
+                 task=None,
                  reward_cfg: RewardConfig = RewardConfig(),
                  batcher_cfg: BatcherConfig = BatcherConfig(),
                  online_cfg: OnlineConfig = OnlineConfig(),
@@ -91,17 +91,34 @@ class AutotuneServer:
             self.registry = None
             snapshot = registry
             self.policy_version = "unversioned"
-        self.action_space: ActionSpace = snapshot.action_space
+        # Accept a TunableTask or a legacy solver config (adapted, using
+        # this server's batcher bucket settings).
+        self.task = coerce_task(task, bucket_step=batcher_cfg.bucket_step,
+                                min_bucket=batcher_cfg.min_bucket)
+        task_space = getattr(self.task, "action_space", None)
+        if task_space is None:
+            self.task.action_space = snapshot.action_space
+        elif not np.array_equal(task_space.actions,
+                                snapshot.action_space.actions):
+            # The batcher executes snapshot-space actions; rewarding them
+            # through a different task space would silently score actions
+            # that were never run.
+            raise ValueError(
+                "task.action_space does not match the policy snapshot's "
+                "action space; build the task with the snapshot's space "
+                "(or leave it None to inherit it)")
+        self.action_space = snapshot.action_space
         self.discretizer = snapshot.discretizer
         self.live = PrecisionPolicy(
             snapshot.action_space, snapshot.discretizer,
             _live_qtable(snapshot.qtable, online_cfg.alpha, seed))
-        self.learner = OnlineLearner(self.live.qtable, online_cfg)
+        self.engine = AutotuneEngine(self.task, reward_cfg,
+                                     policy=self.live, seed=seed)
+        self.learner = OnlineLearner(self.engine, online_cfg)
         self.reward_cfg = reward_cfg
         self.clock = clock
-        self.batcher = MicroBatcher(ir_cfg, batcher_cfg, clock)
+        self.batcher = MicroBatcher(self.task, batcher_cfg, clock)
         self.telemetry = Telemetry()
-        self._rng = np.random.default_rng(seed)
         self._inflight: Dict[int, _InFlight] = {}
         # Bounded retention for poll(): oldest un-polled responses are
         # evicted past the cap, so push-style consumers that never poll
@@ -113,24 +130,19 @@ class AutotuneServer:
         self.on_response: Optional[Callable[[SolveResponse], None]] = None
 
     # -- request path ------------------------------------------------------
-    def select_action(self, features: np.ndarray
-                      ) -> Tuple[int, int, float, bool]:
+    def select_action(self, features) -> Tuple[int, int, float, bool]:
         """(state, action, eps, explore): epsilon-greedy, live policy."""
-        state = self.live.state_of(features)
         eps = self.learner.epsilon.value
-        explore = bool(self._rng.random() < eps)
-        if explore:
-            action = int(self._rng.integers(self.action_space.n_actions))
-        else:
-            action, _ = self.live.predict(features)
+        state, action, explore = self.engine.select_for_features(features,
+                                                                 eps)
         return state, action, eps, explore
 
-    def submit(self, system: LinearSystem) -> int:
-        feats = feature_vector(system.features)
+    def submit(self, instance) -> int:
+        feats = self.task.feature_of(instance)
         state, action, eps, explore = self.select_action(feats)
         req_id, bucket = self.batcher.submit(
-            system, self.action_space.actions[action])
-        self._inflight[req_id] = _InFlight(system, state, action, eps,
+            instance, self.action_space.actions[action])
+        self._inflight[req_id] = _InFlight(instance, state, action, eps,
                                            explore, self.clock(), bucket)
         self.telemetry.on_submit(bucket)
         self.step()          # flush any bucket this submit filled
@@ -159,13 +171,10 @@ class AutotuneServer:
         return self.batcher.pending
 
     # -- learn path --------------------------------------------------------
-    def _complete(self, req_id: int, rec: SolveRecord) -> SolveResponse:
+    def _complete(self, req_id: int, rec: Outcome) -> SolveResponse:
         info = self._inflight.pop(req_id)
         now = self.clock()
-        action_row = self.action_space.actions[info.action]
-        r = reward_fn(rec.ferr, rec.nbe, rec.n_gmres, rec.status,
-                      action_row, info.system.features["kappa_est"],
-                      self.reward_cfg)
+        r = self.engine.reward_for(rec, info.action, info.instance)
         upd = self.learner.update(info.state, info.action, r,
                                   explore=info.explore)
         self.telemetry.on_update(abs(upd.rpe), upd.drift)
@@ -191,7 +200,8 @@ class AutotuneServer:
             raise RuntimeError("server was built without a registry")
         version = self.registry.publish(
             self.live, note=note,
-            extra_meta={"online_updates": self.telemetry.updates,
+            extra_meta={"task": getattr(self.task, "name", "unknown"),
+                        "online_updates": self.telemetry.updates,
                         "drift_events": self.telemetry.drift_events})
         self.registry.promote(version)
         self.policy_version = version

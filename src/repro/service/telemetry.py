@@ -108,6 +108,10 @@ class Telemetry:
             "solver_batches": self.solver_batches,
             "solver_rows": self.solver_rows,
             "padded_rows": self.padded_rows,
+            # Real work vs fixed-shape padding waste, split out explicitly
+            # (mirrors AutotuneEngine.n_solves / n_pad_solves offline).
+            "n_solves": self.solver_rows - self.padded_rows,
+            "n_pad_solves": self.padded_rows,
             "pad_waste_frac": self.padded_rows / max(self.solver_rows, 1),
             "batches_per_bucket": dict(self.batches_per_bucket),
             "requests_per_bucket": dict(self.requests_per_bucket),

@@ -1,4 +1,5 @@
-"""Mixed-precision linear-solver substrate (GMRES-IR case study)."""
+"""Mixed-precision linear-solver substrate (GMRES-IR and CG-IR)."""
+from .cg import CGConfig, CGStats, PCGResult, cg_ir, cg_ir_batch, pcg
 from .gmres import GMRESResult, chop_mv, gmres_precond
 from .ir import (CONVERGED, FAILED, MAXITER, STAGNATED, IRConfig, SolveStats,
                  gmres_ir, gmres_ir_batch)
@@ -9,7 +10,8 @@ from .triangular import lu_solve, solve_unit_lower, solve_upper
 
 __all__ = [
     "GMRESResult", "chop_mv", "gmres_precond", "IRConfig", "SolveStats",
-    "gmres_ir", "gmres_ir_batch", "LUFactors", "lu_factor",
+    "gmres_ir", "gmres_ir_batch", "CGConfig", "CGStats", "PCGResult",
+    "pcg", "cg_ir", "cg_ir_batch", "LUFactors", "lu_factor",
     "lu_factor_blocked", "lu_solve", "solve_unit_lower", "solve_upper",
     "CONVERGED", "STAGNATED", "MAXITER", "FAILED",
     "CONDITION_RANGES", "bucket_by_condition", "eps_max", "success_rate",

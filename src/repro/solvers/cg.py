@@ -1,0 +1,201 @@
+"""Preconditioned-CG iterative refinement (CG-IR) with per-step precisions.
+
+The second instantiation of the autotuning recipe (cf. "Mixed-Precision
+CG Solvers with RL-Driven Precision Tuning", arXiv 2504.14268): the same
+outer iterative-refinement loop as `ir.gmres_ir`, but the correction
+equation A z = r is solved by LU-preconditioned conjugate gradients in
+the working precision instead of GMRES. Intended for SPD systems (the
+sparse SPD generator in `data.matrices`); a breakdown of the CG
+recurrence (non-positive curvature p^T A p, non-finite iterates) maps to
+the explicit failure path, exactly like an overflowed LU in GMRES-IR.
+
+Action a = (u_f, u, u_g, u_r) — four runtime format ids with the same
+roles as GMRES-IR:
+  u_f : LU factorization (used as the CG preconditioner M = LU)
+  u   : solution update x_{i+1} = x_i + z_i
+  u_g : CG working precision (matvec, preconditioner solves, dots)
+  u_r : residual computation r_i = b - A x_i
+
+Stopping criteria mirror `ir.IRConfig` (Eqs. 14-16): update-norm
+convergence, stagnation, max outer iterations, explicit failure.
+
+Everything is jit-compatible with runtime format ids and vmappable over
+(systems x actions) — `cg_ir_batch` is the fixed-shape batched entry
+point used by `repro.tasks.cg_ir.CGIRTask`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.precision import chop, rounding_unit
+
+from .gmres import chop_mv
+from .ir import CONVERGED, FAILED, MAXITER, STAGNATED
+from .lu import lu_factor
+from .triangular import lu_solve
+
+
+@dataclasses.dataclass(frozen=True)
+class CGConfig:
+    tau: float = 1e-6          # convergence tolerance (benchmark parameter)
+    i_max: int = 10            # max outer (refinement) iterations
+    m_max: int = 50            # max inner CG iterations
+    tol_inner: float = 1e-4    # CG relative residual tolerance
+    stag_tol: float = 0.9      # stagnation threshold on ||z_i||/||z_{i-1}||
+
+
+class CGStats(NamedTuple):
+    ferr: jnp.ndarray          # normwise relative forward error (Eq. 17)
+    nbe: jnp.ndarray           # normwise relative backward error (Eq. 17)
+    n_outer: jnp.ndarray       # refinement iterations performed
+    n_cg: jnp.ndarray          # total inner CG iterations
+    status: jnp.ndarray        # CONVERGED/STAGNATED/MAXITER/FAILED
+    res_norm: jnp.ndarray      # final ||b - A x||_inf
+
+
+class PCGResult(NamedTuple):
+    z: jnp.ndarray             # solution update
+    iters: jnp.ndarray         # inner iterations performed
+    fail: jnp.ndarray          # breakdown (non-SPD curvature / non-finite)
+
+
+def _inf_norm(v):
+    return jnp.max(jnp.abs(v))
+
+
+def _dot(a, b, fmt_id):
+    """Dot product with format-rounded products, carrier accumulation."""
+    return chop(jnp.sum(chop(a * b, fmt_id)), fmt_id)
+
+
+def pcg(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
+        r: jnp.ndarray, fmt_g, *, m_max: int, tol: float) -> PCGResult:
+    """LU-preconditioned CG on A z = r, entirely in precision u_g.
+
+    A_g: the system matrix pre-chopped to u_g; LU/perm: chopped factors
+    of A in u_f, used as the (fixed) preconditioner.
+    """
+    dtype = r.dtype
+    r0 = chop(r, fmt_g)
+    beta0 = jnp.linalg.norm(r0)
+    ok0 = jnp.isfinite(beta0) & (beta0 > 0)
+    y0 = lu_solve(LU, perm, r0, fmt_g)
+    rho0 = _dot(r0, y0, fmt_g)
+    z0 = jnp.zeros_like(r0)
+
+    def cond(state):
+        *_, j, done, _fail = state
+        return (~done) & (j < m_max)
+
+    def body(state):
+        z, rin, p, rho, j, done, fail = state
+        q = chop_mv(A_g, p, fmt_g)
+        pq = _dot(p, q, fmt_g)
+        # Non-positive curvature: A (or the chopped recurrence) stopped
+        # behaving SPD — a genuine CG breakdown, not mere stagnation.
+        breakdown = (pq <= 0) | ~jnp.isfinite(pq)
+        pq_safe = jnp.where(breakdown, jnp.ones((), dtype), pq)
+        alpha = chop(rho / pq_safe, fmt_g)
+        z_new = chop(z + chop(alpha * p, fmt_g), fmt_g)
+        rin_new = chop(rin - chop(alpha * q, fmt_g), fmt_g)
+        res = jnp.linalg.norm(rin_new)
+        y = lu_solve(LU, perm, rin_new, fmt_g)
+        rho_new = _dot(rin_new, y, fmt_g)
+        rho_safe = jnp.where(rho == 0, jnp.ones((), dtype), rho)
+        beta = chop(rho_new / rho_safe, fmt_g)
+        p_new = chop(y + chop(beta * p, fmt_g), fmt_g)
+
+        nonfinite = ~(jnp.all(jnp.isfinite(z_new)) & jnp.isfinite(res)
+                      & jnp.isfinite(rho_new))
+        fail_now = breakdown | nonfinite
+        converged = res <= tol * beta0
+        z_new = jnp.where(fail_now, z, z_new)
+        return (z_new, rin_new, p_new, rho_new, j + 1,
+                fail_now | converged, fail | fail_now)
+
+    init = (z0, r0, y0, rho0, jnp.int32(0), ~ok0, ~ok0)
+    z, _, _, _, j, _, fail = lax.while_loop(cond, body, init)
+    fail = fail | ~jnp.all(jnp.isfinite(z))
+    z = jnp.where(fail, jnp.zeros_like(z), z)
+    return PCGResult(z, j, fail)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def cg_ir(A: jnp.ndarray, b: jnp.ndarray, x_true: jnp.ndarray,
+          action: jnp.ndarray, cfg: CGConfig = CGConfig()) -> CGStats:
+    """Solve A x = b with CG-IR under precision action (u_f, u, u_g, u_r).
+
+    A: (n, n) float64 carrier (SPD); action: int32[4] runtime format ids.
+    """
+    dtype = A.dtype
+    uf, u, ug, ur = action[0], action[1], action[2], action[3]
+
+    lu = lu_factor(A, uf)
+    A_g = chop(A, ug)
+    A_r = chop(A, ur)
+    b_r = chop(b, ur)
+    x0 = jnp.zeros_like(b)
+
+    u_work = rounding_unit(u, dtype)
+    conv_tol = jnp.maximum(jnp.asarray(cfg.tau, dtype), u_work)
+
+    def cond(state):
+        *_, done = state
+        return ~done
+
+    def body(state):
+        x, znorm_prev, i, n_cg, status, done = state
+        r = chop(b_r - chop_mv(A_r, x, ur), ur)
+        cg = pcg(A_g, lu.lu, lu.perm, r, ug,
+                 m_max=cfg.m_max, tol=cfg.tol_inner)
+        z = chop(cg.z, u)
+        x_new = chop(x + z, u)
+        znorm = _inf_norm(z)
+        xnorm = _inf_norm(x_new)
+        i_new = i + 1
+
+        converged = znorm <= conv_tol * xnorm
+        stagnated = (i > 0) & (znorm >= cfg.stag_tol * znorm_prev)
+        hit_max = i_new >= cfg.i_max
+        failed = cg.fail | ~jnp.all(jnp.isfinite(x_new))
+
+        status = jnp.where(
+            failed, FAILED,
+            jnp.where(converged, CONVERGED,
+                      jnp.where(stagnated, STAGNATED,
+                                jnp.where(hit_max, MAXITER, status))))
+        done = converged | stagnated | hit_max | failed
+        x_new = jnp.where(failed, x, x_new)
+        return (x_new, znorm, i_new, n_cg + cg.iters, status, done)
+
+    init_state = (x0, jnp.asarray(jnp.inf, dtype), jnp.int32(0),
+                  jnp.int32(0), jnp.int32(MAXITER), lu.fail)
+    x, _, n_outer, n_cg, status, _ = lax.while_loop(cond, body, init_state)
+    status = jnp.where(lu.fail, FAILED, status)
+
+    # Final metrics in the carrier (true fp64), Eq. 17.
+    res = b - A @ x
+    res_norm = _inf_norm(res)
+    normA = jnp.max(jnp.sum(jnp.abs(A), axis=1))
+    ferr = _inf_norm(x - x_true) / _inf_norm(x_true)
+    nbe = res_norm / (normA * _inf_norm(x) + _inf_norm(b))
+    ferr = jnp.where(jnp.isfinite(ferr), ferr, jnp.asarray(jnp.inf, dtype))
+    nbe = jnp.where(jnp.isfinite(nbe), nbe, jnp.asarray(jnp.inf, dtype))
+    return CGStats(ferr, nbe, n_outer, n_cg, status, res_norm)
+
+
+# Batched entry point: one fixed-shape chunk = one call.
+cg_ir_batch = jax.jit(
+    jax.vmap(cg_ir, in_axes=(0, 0, 0, 0, None)),
+    static_argnames=("cfg",))
+
+
+# Re-exported status codes (shared convention with ir.py / core.task).
+__all__ = ["CGConfig", "CGStats", "PCGResult", "pcg", "cg_ir",
+           "cg_ir_batch", "CONVERGED", "STAGNATED", "MAXITER", "FAILED"]

@@ -1,0 +1,40 @@
+"""Concrete `TunableTask` instantiations.
+
+Each task binds one algorithm from `repro.solvers` to the solver-
+agnostic autotuning API in `repro.core.task`, so the single
+`AutotuneEngine` / `AutotuneServer` pair can train and serve it. Adding
+a workload means adding a module here — the engine, trainer, service,
+and registry are shared.
+
+`adapt_legacy` coerces pre-TunableTask call signatures (a bare
+`IRConfig` / `CGConfig`, or None for the historical GMRES-IR default)
+into tasks; `core.task.coerce_task` defers here so the engine and
+server never import a solver.
+"""
+from __future__ import annotations
+
+from .base import LinearSystemTask, stack_fixed
+from .cg_ir import CGIRTask
+from .gmres_ir import GMRESIRTask, outcome_of_record
+
+
+def adapt_legacy(obj=None, *, action_space=None, bucket_step=None,
+                 min_bucket=None):
+    """Adapt a legacy solver-config object into a `TunableTask`."""
+    from repro.solvers.cg import CGConfig
+    from repro.solvers.ir import IRConfig
+    kw = dict(action_space=action_space,
+              bucket_step=bucket_step if bucket_step is not None else 128,
+              min_bucket=min_bucket if min_bucket is not None else 128)
+    if obj is None:
+        return GMRESIRTask(**kw)
+    if isinstance(obj, IRConfig):
+        return GMRESIRTask(ir_cfg=obj, **kw)
+    if isinstance(obj, CGConfig):
+        return CGIRTask(cg_cfg=obj, **kw)
+    raise TypeError(f"cannot adapt {type(obj).__name__} into a TunableTask; "
+                    "pass a TunableTask, an IRConfig, or a CGConfig")
+
+
+__all__ = ["LinearSystemTask", "GMRESIRTask", "CGIRTask", "adapt_legacy",
+           "outcome_of_record", "stack_fixed"]

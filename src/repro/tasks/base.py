@@ -1,0 +1,104 @@
+"""Shared `TunableTask` implementation for linear-system solvers.
+
+Both shipped tasks (GMRES-IR, CG-IR) autotune per-step precisions for
+`Ax = b` over `data.matrices.LinearSystem` instances, so everything but
+the batched solver itself lives here: paper features (Eq. 18), size
+bucketing with identity padding (solution preserving), fixed-shape
+batch stacking, and the Eq. 21 reward mapped from an `Outcome`'s
+metrics. Subclasses provide `name`, `inner_iter_metric` (the metrics
+key holding the work count fed to the Eq. 25 penalty), and
+`solve_rows`.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.action_space import ActionSpace
+from repro.core.features import PAPER_FEATURES, feature_vector
+from repro.core.rewards import reward as reward_fn
+from repro.core.task import Outcome, bucket_of
+from repro.data.matrices import LinearSystem, pad_system
+
+
+def stack_fixed(rows: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
+                action_rows: Sequence[np.ndarray], chunk: int):
+    """Stack padded (A, b, x) rows + action rows into fixed-shape arrays.
+
+    The batch dimension is padded to exactly `chunk` by repeating row 0,
+    keeping the compiled shape constant; callers drop the pad rows from
+    the results (`k` = number of real rows).
+    """
+    k = len(rows)
+    assert 0 < k <= chunk, (k, chunk)
+    idx = list(range(k)) + [0] * (chunk - k)
+    A = np.stack([rows[i][0] for i in idx])
+    b = np.stack([rows[i][1] for i in idx])
+    x = np.stack([rows[i][2] for i in idx])
+    acts = np.stack([np.asarray(action_rows[i], np.int32) for i in idx])
+    return A, b, x, acts, k
+
+
+class LinearSystemTask:
+    """Base task over a (possibly empty) set of `LinearSystem`s.
+
+    `action_space` may be None for serving-only adapters; the server
+    injects the promoted policy snapshot's space before any reward is
+    computed.
+    """
+
+    name = "linear-system"
+    inner_iter_metric = "n_inner"
+
+    def __init__(self, systems: Sequence[LinearSystem] = (),
+                 action_space: Optional[ActionSpace] = None,
+                 bucket_step: int = 128, min_bucket: int = 128):
+        self.instances: List[LinearSystem] = list(systems)
+        self.action_space = action_space
+        self.bucket_step = bucket_step
+        self.min_bucket = min_bucket
+        self._features: Optional[np.ndarray] = None
+        self._kappas: Optional[np.ndarray] = None
+
+    # -- context features --------------------------------------------------
+    @property
+    def features(self) -> np.ndarray:
+        if self._features is None:
+            if not self.instances:
+                return np.zeros((0, len(PAPER_FEATURES)))
+            self._features = np.stack([self.feature_of(s)
+                                       for s in self.instances])
+        return self._features
+
+    @property
+    def kappas(self) -> np.ndarray:
+        if self._kappas is None:
+            self._kappas = np.array([s.features["kappa_est"]
+                                     for s in self.instances])
+        return self._kappas
+
+    def feature_of(self, system: LinearSystem) -> np.ndarray:
+        return feature_vector(system.features)
+
+    # -- shape bucketing ---------------------------------------------------
+    def bucket_key(self, system: LinearSystem) -> int:
+        return bucket_of(system.n, self.bucket_step, self.min_bucket)
+
+    def prepare(self, system: LinearSystem):
+        """(A, b, x) identity-padded to the system's size bucket."""
+        return pad_system(system, self.bucket_key(system))
+
+    # -- solving / reward --------------------------------------------------
+    def solve_rows(self, rows, action_rows, chunk: int) -> List[Outcome]:
+        raise NotImplementedError
+
+    def reward(self, outcome: Outcome, action_idx: int,
+               instance: LinearSystem, cfg) -> float:
+        """Eq. 21 on the outcome's metrics; the inner-iteration count
+        named by `inner_iter_metric` feeds the Eq. 25 work penalty."""
+        m = outcome.metrics
+        return reward_fn(m["ferr"], m["nbe"], m[self.inner_iter_metric],
+                         outcome.status,
+                         self.action_space.actions[int(action_idx)],
+                         instance.features["kappa_est"], cfg)

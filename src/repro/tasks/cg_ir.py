@@ -1,0 +1,50 @@
+"""CG-IR as a `TunableTask` — proof the autotuning API generalizes.
+
+Same bandit, same engine, same server as GMRES-IR; only the batched
+solver and the work metric differ. Intended for SPD systems (the
+`data.matrices.sparse_spd` generator); on indefinite matrices the CG
+recurrence breaks down and the reward's failure path takes over.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.action_space import ActionSpace
+from repro.core.task import Outcome
+from repro.data.matrices import LinearSystem
+from repro.solvers.cg import CGConfig, cg_ir_batch
+from repro.tasks.base import LinearSystemTask, stack_fixed
+
+
+class CGIRTask(LinearSystemTask):
+    name = "cg_ir"
+    inner_iter_metric = "n_cg"
+
+    def __init__(self, systems: Sequence[LinearSystem] = (),
+                 action_space: Optional[ActionSpace] = None,
+                 cg_cfg: CGConfig = CGConfig(),
+                 bucket_step: int = 128, min_bucket: int = 128):
+        super().__init__(systems, action_space, bucket_step, min_bucket)
+        self.cg_cfg = cg_cfg
+
+    def solve_rows(self, rows, action_rows: Sequence[np.ndarray],
+                   chunk: int) -> List[Outcome]:
+        A, b, x, acts, k = stack_fixed(rows, action_rows, chunk)
+        stats = cg_ir_batch(jnp.asarray(A), jnp.asarray(b), jnp.asarray(x),
+                            jnp.asarray(acts, jnp.int32), self.cg_cfg)
+        ferr = np.asarray(stats.ferr)
+        nbe = np.asarray(stats.nbe)
+        n_outer = np.asarray(stats.n_outer)
+        n_cg = np.asarray(stats.n_cg)
+        status = np.asarray(stats.status)
+        res = np.asarray(stats.res_norm)
+        return [Outcome(status=int(status[j]), cost=float(n_cg[j]),
+                        metrics={"ferr": float(ferr[j]),
+                                 "nbe": float(nbe[j]),
+                                 "n_outer": int(n_outer[j]),
+                                 "n_cg": int(n_cg[j]),
+                                 "res_norm": float(res[j])})
+                for j in range(k)]

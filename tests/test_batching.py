@@ -1,0 +1,96 @@
+"""core/batching edge cases: bucket boundaries, non-dividing steps, and
+single-row flushes bit-matching the unbatched solver."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (bucket_of, pad_to_bucket, reduced_action_space,
+                        solve_fixed_batch)
+from repro.data.matrices import randsvd_dense
+from repro.solvers import IRConfig, gmres_ir
+from repro.tasks import stack_fixed
+
+SPACE = reduced_action_space()
+IR = IRConfig(tau=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bucket_of boundaries
+# ---------------------------------------------------------------------------
+
+def test_bucket_exactly_on_boundary():
+    # n == k * step must NOT round up to the next bucket.
+    assert bucket_of(128, 128) == 128
+    assert bucket_of(256, 128) == 256
+    assert bucket_of(16, 16, minimum=16) == 16
+    assert bucket_of(32, 16, minimum=16) == 32
+
+
+def test_bucket_step_not_dividing_n():
+    assert bucket_of(129, 128) == 256
+    assert bucket_of(100, 48, minimum=48) == 144
+    assert bucket_of(1, 16, minimum=16) == 16   # floored at minimum
+    assert bucket_of(17, 16, minimum=16) == 32
+
+
+@pytest.mark.parametrize("n,step,minimum", [(7, 16, 16), (16, 16, 16),
+                                            (23, 16, 16), (31, 8, 16)])
+def test_pad_to_bucket_preserves_solution(n, step, minimum):
+    rng = np.random.default_rng(0)
+    s = randsvd_dense(n, 50.0, rng)
+    A, b, x = pad_to_bucket(s, step, minimum)
+    n_pad = bucket_of(n, step, minimum)
+    assert A.shape == (n_pad, n_pad) and b.shape == (n_pad,)
+    # Identity padding: the padded system has the zero-extended solution.
+    np.testing.assert_allclose(A @ x, b, atol=1e-10)
+    np.testing.assert_array_equal(x[n:], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# stack_fixed / solve_fixed_batch
+# ---------------------------------------------------------------------------
+
+def test_stack_fixed_pads_batch_by_repeating_row0():
+    rng = np.random.default_rng(1)
+    rows = [pad_to_bucket(randsvd_dense(10, 10.0, rng), 16, 16)
+            for _ in range(3)]
+    acts = [SPACE.actions[i] for i in range(3)]
+    A, b, x, a, k = stack_fixed(rows, acts, chunk=8)
+    assert k == 3 and A.shape[0] == 8
+    for j in range(3, 8):          # pad rows repeat row 0
+        np.testing.assert_array_equal(A[j], A[0])
+        np.testing.assert_array_equal(a[j], a[0])
+    with pytest.raises(AssertionError):
+        stack_fixed(rows, acts, chunk=2)      # more rows than chunk
+
+
+def test_single_row_flush_bitmatches_unbatched_solver():
+    rng = np.random.default_rng(2)
+    s = randsvd_dense(13, 1e3, rng)
+    A, b, x = pad_to_bucket(s, 16, 16)
+    action = SPACE.actions[-1]
+    (rec,) = solve_fixed_batch([A], [b], [x], [action], IR, chunk=4)
+    st = gmres_ir(jnp.asarray(A), jnp.asarray(b), jnp.asarray(x),
+                  jnp.asarray(action, jnp.int32), IR)
+    assert rec.ferr == float(st.ferr)
+    assert rec.nbe == float(st.nbe)
+    assert rec.n_outer == int(st.n_outer)
+    assert rec.n_gmres == int(st.n_gmres)
+    assert rec.status == int(st.status)
+    assert rec.res_norm == float(st.res_norm)
+
+
+def test_partial_chunk_records_match_per_row_solves():
+    rng = np.random.default_rng(3)
+    systems = [randsvd_dense(n, 100.0, rng) for n in (9, 12, 14)]
+    padded = [pad_to_bucket(s, 16, 16) for s in systems]
+    actions = [SPACE.actions[-1], SPACE.actions[20], SPACE.actions[-1]]
+    recs = solve_fixed_batch([p[0] for p in padded], [p[1] for p in padded],
+                             [p[2] for p in padded], actions, IR, chunk=8)
+    assert len(recs) == 3          # pad rows dropped from the result
+    for (A, b, x), action, rec in zip(padded, actions, recs):
+        st = gmres_ir(jnp.asarray(A), jnp.asarray(b), jnp.asarray(x),
+                      jnp.asarray(action, jnp.int32), IR)
+        assert rec.n_outer == int(st.n_outer)
+        assert rec.status == int(st.status)
+        assert rec.ferr == pytest.approx(float(st.ferr), rel=1e-9)

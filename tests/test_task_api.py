@@ -1,0 +1,222 @@
+"""Solver-agnostic TunableTask API: engine/task equivalence with the
+legacy env, CG-IR as a second instantiation (train + serve through the
+same code paths), solver-import hygiene, n_solves accounting, and the
+degenerate-discretizer fix."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (AutotuneEngine, Discretizer, GMRESIREnv, Outcome,
+                        TrainConfig, W1, coerce_task, evaluate_fixed_action,
+                        evaluate_policy, is_tunable_task,
+                        reduced_action_space, train_policy)
+from repro.data import generate_dense_set, generate_sparse_set
+from repro.service import (AutotuneServer, BatcherConfig, MicroBatcher,
+                           OnlineConfig, PolicyRegistry)
+from repro.solvers import CGConfig, IRConfig
+from repro.tasks import CGIRTask, GMRESIRTask, adapt_legacy
+
+SPACE = reduced_action_space()
+IR = IRConfig(tau=1e-6)
+CG = CGConfig(tau=1e-6)
+SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+
+def _dense(n_sys, seed=0, n_range=(12, 30)):
+    rng = np.random.default_rng(seed)
+    return generate_dense_set(n_sys, rng, n_range=n_range,
+                              log10_kappa_range=(1, 6))
+
+
+def _spd(n_sys, seed=0, n_range=(12, 30)):
+    rng = np.random.default_rng(seed)
+    return generate_sparse_set(n_sys, rng, n_range=n_range)
+
+
+# ---------------------------------------------------------------------------
+# Engine <-> legacy env equivalence
+# ---------------------------------------------------------------------------
+
+def test_task_training_matches_legacy_env_bitwise():
+    systems = _dense(6)
+    env = GMRESIREnv(systems, SPACE, IR, chunk=4, bucket_step=16)
+    p_env, h_env = train_policy(env, W1, TrainConfig(episodes=3))
+    task = GMRESIRTask(systems, SPACE, IR, bucket_step=16, min_bucket=16)
+    p_task, h_task = train_policy(task, W1, TrainConfig(episodes=3))
+    assert np.array_equal(p_env.qtable.Q, p_task.qtable.Q)
+    assert np.array_equal(p_env.qtable.N, p_task.qtable.N)
+    assert h_env.episode_reward == h_task.episode_reward
+
+
+def test_legacy_env_record_exposes_solverecord_fields():
+    systems = _dense(2)
+    env = GMRESIREnv(systems, SPACE, IR, chunk=2, bucket_step=16)
+    rec = env.record(0, SPACE.n_actions - 1)
+    assert isinstance(rec, Outcome)
+    # SolveRecord-era attribute access flows through Outcome.metrics.
+    for field in ("ferr", "nbe", "n_outer", "n_gmres", "res_norm"):
+        getattr(rec, field)
+    assert rec.ok
+    with pytest.raises(AttributeError):
+        rec.not_a_metric
+
+
+def test_outcome_survives_pickle_and_copy():
+    import copy
+    import pickle
+    out = Outcome(status=0, cost=4.0, metrics={"ferr": 1e-9, "nbe": 1e-12})
+    back = pickle.loads(pickle.dumps(out))
+    assert back.ferr == out.ferr and back.status == 0
+    dup = copy.deepcopy(out)
+    assert dup.metrics == out.metrics
+    assert copy.copy(out).cost == 4.0
+
+
+def test_server_rejects_mismatched_task_action_space(tmp_path):
+    from repro.core import full_action_space
+    task = GMRESIRTask(_dense(4), SPACE, IR, bucket_step=16, min_bucket=16)
+    reg, _, _ = PolicyRegistry.warm_start(str(tmp_path / "reg"), task, W1,
+                                          TrainConfig(episodes=1))
+    bad_task = GMRESIRTask(action_space=full_action_space(), ir_cfg=IR,
+                           bucket_step=16, min_bucket=16)
+    with pytest.raises(ValueError, match="action space"):
+        AutotuneServer(reg, bad_task, W1,
+                       BatcherConfig(bucket_step=16, min_bucket=16))
+
+
+def test_coerce_task_and_adapters():
+    assert isinstance(coerce_task(IR), GMRESIRTask)
+    assert isinstance(coerce_task(CG), CGIRTask)
+    assert isinstance(coerce_task(None), GMRESIRTask)
+    task = GMRESIRTask((), SPACE, IR)
+    assert coerce_task(task) is task
+    assert is_tunable_task(task)
+    assert not is_tunable_task(IR)
+    with pytest.raises(TypeError):
+        adapt_legacy(object())
+    adapted = coerce_task(IR, bucket_step=32, min_bucket=32)
+    assert adapted.bucket_step == 32 and adapted.min_bucket == 32
+
+
+# ---------------------------------------------------------------------------
+# Satellite: n_solves accounting (real rows vs chunk padding)
+# ---------------------------------------------------------------------------
+
+def test_engine_counts_real_and_pad_solves_separately():
+    systems = _dense(3)
+    env = GMRESIREnv(systems, SPACE, IR, chunk=8, bucket_step=16)
+    env.solve_pairs([(i, SPACE.n_actions - 1) for i in range(3)])
+    # 3 real rows in one chunk-of-8 call: 3 real + 5 padding.
+    assert env.n_solves == 3
+    assert env.n_pad_solves == 5
+    summary = env.summarize()
+    assert summary["n_solves"] == 3
+    assert summary["n_pad_solves"] == 5
+    assert summary["cache_size"] == 3
+    # A second, cached lookup does no new solver work.
+    env.solve_pairs([(0, SPACE.n_actions - 1)])
+    assert env.n_solves == 3 and env.n_pad_solves == 5
+
+
+def test_train_history_surfaces_solver_work():
+    task = GMRESIRTask(_dense(3), SPACE, IR, bucket_step=16, min_bucket=16)
+    _, hist = train_policy(task, W1, TrainConfig(episodes=2))
+    assert hist.n_solves > 0
+    assert hist.n_solves + hist.n_pad_solves >= hist.n_solves
+    assert hist.n_solves == hist.unique_solves[-1]  # cache == real rows here
+
+
+# ---------------------------------------------------------------------------
+# Satellite: degenerate discretizer fit
+# ---------------------------------------------------------------------------
+
+def test_discretizer_single_instance_single_bin():
+    d = Discretizer.fit(np.array([[2.0, 5.0]]), (10, 10))
+    # All queries — at, below, above the fit point — land in one state.
+    for q in ([2.0, 5.0], [2.3, 5.9], [-100.0, 100.0], [2.0001, 5.0]):
+        assert d(np.array(q)) == 0
+
+
+def test_discretizer_constant_column_is_single_bin():
+    feats = np.array([[0.0, 7.0], [9.0, 7.0], [4.5, 7.0]])
+    d = Discretizer.fit(feats, (10, 5))
+    # Column 1 is constant: its bin index is always 0, whatever the query
+    # (previously an off-point query landed in an arbitrary bin).
+    idx = d.bin_indices(np.array([[4.5, 7.3], [4.5, 6.1], [4.5, 7.0]]))
+    assert np.array_equal(idx[:, 1], [0, 0, 0])
+    # Non-degenerate column 0 still bins normally.
+    assert d.bin_indices(np.array([9.0, 7.0]))[0, 0] == 9
+    states = d(np.array([[4.5, 7.3], [4.5, 6.1]]))
+    assert states[0] == states[1]
+
+
+# ---------------------------------------------------------------------------
+# CG-IR: the API-generalization proof
+# ---------------------------------------------------------------------------
+
+def test_cg_task_trains_and_evaluates_via_shared_paths():
+    systems = _spd(6)
+    task = CGIRTask(systems, SPACE, CG, bucket_step=16, min_bucket=16)
+    policy, hist = train_policy(task, W1, TrainConfig(episodes=3))
+    assert len(hist.episode_reward) == 3
+    ev = evaluate_policy(policy, CGIRTask(systems, SPACE, CG, bucket_step=16,
+                                          min_bucket=16), tau_base=1e-6)
+    assert ev["table"]           # sparse SPD set lands in the high ranges
+    assert np.all(ev["n_inner"] >= 0)
+    bl = evaluate_fixed_action(
+        CGIRTask(systems, SPACE, CG, bucket_step=16, min_bucket=16),
+        SPACE.n_actions - 1, 1e-6)
+    # The all-FP64 baseline solves SPD systems accurately through CG-IR.
+    assert np.all(bl["ferr"] < 1e-6)
+
+
+def test_cg_task_serves_through_the_same_server(tmp_path):
+    systems = _spd(6, seed=1)
+    train_task = CGIRTask(systems, SPACE, CG, bucket_step=16, min_bucket=16)
+    reg, version, snap = PolicyRegistry.warm_start(
+        str(tmp_path / "reg"), train_task, W1, TrainConfig(episodes=2))
+    serve_task = CGIRTask(action_space=SPACE, cg_cfg=CG, bucket_step=16,
+                          min_bucket=16)
+    srv = AutotuneServer(
+        reg, serve_task, W1,
+        BatcherConfig(max_batch=4, max_wait_s=0.005, bucket_step=16,
+                      min_bucket=16), OnlineConfig())
+    requests = _spd(8, seed=2)
+    ids = [srv.submit(s) for s in requests]
+    srv.drain()
+    responses = [srv.poll(i) for i in ids]
+    assert all(r is not None for r in responses)
+    assert all("n_cg" in r.record.metrics for r in responses)
+    tel = srv.telemetry.snapshot()
+    assert tel["responses"] == 8 and tel["updates"] == 8
+    assert tel["n_solves"] + tel["n_pad_solves"] == tel["solver_rows"]
+    v2 = srv.snapshot()
+    assert reg.meta(v2)["task"] == "cg_ir"
+
+
+def test_microbatcher_hosts_cg_task():
+    task = CGIRTask(action_space=SPACE, cg_cfg=CG, bucket_step=16,
+                    min_bucket=16)
+    mb = MicroBatcher(task, BatcherConfig(max_batch=2, max_wait_s=10.0,
+                                          bucket_step=16, min_bucket=16))
+    for s in _spd(2, seed=3, n_range=(12, 14)):   # one shared bucket (16)
+        mb.submit(s, SPACE.actions[-1])
+    out = mb.pump()
+    assert len(out) == 1 and len(out[0].records) == 2
+    for rec in out[0].records:
+        assert rec.ferr < 1e-6 and rec.ok  # fp64 CG-IR solves SPD exactly
+
+
+# ---------------------------------------------------------------------------
+# Import hygiene: the engine and server really are solver-agnostic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rel", ["core/engine.py", "core/task.py",
+                                 "service/server.py", "service/batcher.py"])
+def test_no_solver_imports_in_agnostic_layers(rel):
+    with open(os.path.join(SRC, rel)) as f:
+        src = f.read()
+    for banned in ("repro.solvers.ir", "repro.solvers.cg", "gmres",
+                   "repro.tasks.gmres", "repro.tasks.cg"):
+        assert banned not in src, f"{rel} mentions {banned}"
