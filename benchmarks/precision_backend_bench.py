@@ -1,0 +1,162 @@
+"""Precision-backend throughput: jnp oracle vs pallas kernels, end to end.
+
+For each task (GMRES-IR on dense randsvd, CG-IR on sparse SPD) and each
+precision backend (DESIGN.md §6), measures
+
+  * solves/s through the `AutotuneEngine` (exhaustive instance x action
+    sweep — every solve runs the full batched solver on that backend), and
+  * req/s through the serving stack (`AutotuneServer` submit -> micro-
+    batch -> solve -> reward -> Q-update roundtrip),
+
+so `BENCH_results.json` accumulates the jnp-vs-pallas hot-path
+comparison the backend layer exists for. Off-TPU the pallas backend is
+benchmarked through the Pallas *interpreter* (recorded in the report's
+``mode`` field): that measures dispatch correctness and overhead, not
+kernel speed — compiled-TPU numbers come from running this same bench
+on a TPU host, where `"pallas"` resolves to the compiled kernels.
+
+    PYTHONPATH=src python benchmarks/precision_backend_bench.py [--recompute]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):      # script entry: repo root onto sys.path
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+        __file__))))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import time
+
+import numpy as np
+
+from benchmarks.common import W1, load_report, save_report
+from repro.core import TrainConfig, reduced_action_space
+from repro.core.engine import AutotuneEngine
+from repro.data import generate_dense_set, generate_sparse_set
+from repro.precision import PallasBackend, resolve_backend
+from repro.service import (AutotuneServer, BatcherConfig, OnlineConfig,
+                           PolicyRegistry)
+from repro.solvers import CGConfig, IRConfig
+from repro.tasks import CGIRTask, GMRESIRTask
+
+BUCKET = 48
+CHUNK = 8
+
+
+def _backend_under_test():
+    """(label, backend, mode) for the pallas side of the comparison."""
+    if jax.default_backend() == "tpu":
+        return resolve_backend("pallas"), "compiled-tpu"
+    return PallasBackend(interpret=True), "interpret-cpu"
+
+
+def _systems(task_name: str, n_sys: int, seed: int, n_range=(16, 44)):
+    rng = np.random.default_rng(seed)
+    if task_name == "gmres_ir":
+        return generate_dense_set(n_sys, rng, n_range=n_range,
+                                  log10_kappa_range=(1, 6))
+    return generate_sparse_set(n_sys, rng, n_range=n_range,
+                               log10_kappa_range=(4, 6))
+
+
+def _make_task(task_name: str, systems, backend):
+    space = reduced_action_space()
+    if task_name == "gmres_ir":
+        return GMRESIRTask(systems, space, IRConfig(tau=1e-6),
+                           bucket_step=BUCKET, min_bucket=BUCKET,
+                           backend=backend)
+    return CGIRTask(systems, space, CGConfig(tau=1e-6),
+                    bucket_step=BUCKET, min_bucket=BUCKET, backend=backend)
+
+
+def bench_engine(task_name: str, backend, n_sys: int, n_range,
+                 seed: int = 0) -> dict:
+    """Exhaustive (instance x action) sweep through the engine."""
+    task = _make_task(task_name,
+                      _systems(task_name, n_sys, seed, n_range), backend)
+    engine = AutotuneEngine(task, chunk=CHUNK, seed=seed)
+    # Warm-up: compile the per-bucket executable outside the timed window.
+    engine.solve_pairs([(0, 0)])
+    warm = engine.n_solves
+    t0 = time.perf_counter()
+    engine.prefill_all()
+    wall = time.perf_counter() - t0
+    n = engine.n_solves - warm
+    return {"n_solves": n, "engine_wall_s": wall,
+            "solves_per_s": n / max(wall, 1e-9)}
+
+
+def bench_serving(task_name: str, backend, tmp_root: str, n_req: int,
+                  n_range, seed: int = 0) -> dict:
+    """Submit -> drain roundtrip through the AutotuneServer."""
+    train = _systems(task_name, 6, seed, n_range)
+    task = _make_task(task_name, train, backend)
+    reg, _, _ = PolicyRegistry.warm_start(
+        os.path.join(tmp_root, f"{task_name}_{backend.name}"), task, W1,
+        TrainConfig(episodes=2, seed=seed))
+    srv = AutotuneServer(
+        reg, _make_task(task_name, (), backend), W1,
+        BatcherConfig(max_batch=CHUNK, max_wait_s=0.001,
+                      bucket_step=BUCKET, min_bucket=BUCKET),
+        OnlineConfig(), seed=seed)
+    reqs = _systems(task_name, n_req, seed + 1, n_range)
+    for s in reqs:                      # warm the serving executable
+        srv.submit(s)
+    srv.drain()
+    t0 = time.perf_counter()
+    for s in reqs:
+        srv.submit(s)
+    srv.drain()
+    wall = time.perf_counter() - t0
+    return {"n_req": n_req, "serving_wall_s": wall,
+            "req_per_s": n_req / max(wall, 1e-9)}
+
+
+def run(full: bool = False, recompute: bool = False) -> list:
+    scale = {"n_sys": 12 if full else 6, "n_req": 32 if full else 16,
+             "n_range": [32, 96] if full else [16, 44]}
+    pallas, mode = _backend_under_test()
+    cached = None if recompute else load_report("precision_backend_bench")
+    # A cached report is only valid for the same scale AND the same
+    # pallas execution mode: interpret-cpu numbers must not shadow a
+    # compiled-TPU pass once the host gains TPU access.
+    if (cached is not None and cached.get("scale") == scale
+            and cached.get("pallas_mode") == mode):
+        return emit_rows(cached)
+    import tempfile
+    report = {"pallas_mode": mode, "scale": scale, "entries": []}
+    n_range = tuple(scale["n_range"])
+    with tempfile.TemporaryDirectory() as tmp:
+        for task_name in ("gmres_ir", "cg_ir"):
+            for backend in (resolve_backend("jnp"), pallas):
+                label = backend.name if backend.name != "pallas" else mode
+                eng = bench_engine(task_name, backend, scale["n_sys"],
+                                   n_range)
+                srv = bench_serving(task_name, backend, tmp,
+                                    scale["n_req"], n_range)
+                report["entries"].append(
+                    {"task": task_name, "backend": backend.name,
+                     "mode": label, **eng, **srv})
+    save_report("precision_backend_bench", report)
+    return emit_rows(report)
+
+
+def emit_rows(report: dict) -> list:
+    rows = []
+    for e in report["entries"]:
+        us = 1e6 * e["engine_wall_s"] / max(e["n_solves"], 1)
+        derived = (f"solves_per_s={e['solves_per_s']:.2f};"
+                   f"req_per_s={e['req_per_s']:.2f};mode={e['mode']}")
+        rows.append(f"backend/{e['task']}/{e['backend']},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(full="--full" in sys.argv,
+                 recompute="--recompute" in sys.argv):
+        print(r)

@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   table4  — sparse SPD (paper Tables 3/4/5)
   tasks   — per-TunableTask training throughput (GMRES-IR vs CG-IR
             through the shared AutotuneEngine)
+  backend — precision-backend comparison: jnp oracle vs pallas kernels,
+            solves/s + req/s per task (DESIGN.md §6)
   service — online autotuning service: req/s + latency vs micro-batch size
   kernels — chop / qmatmul microbenchmarks
   roofline— summary rows from launch/dryrun artifacts, if present
@@ -66,6 +68,16 @@ def write_bench_results(path: str = BENCH_RESULTS_PATH) -> dict:
                         "n_solves": t["n_solves"],
                         "reward_last": t["reward_last"]}
             for t in tasks.get("tasks", [])}
+    backend = load_report("precision_backend_bench")
+    if backend:
+        summary["precision_backend"] = {
+            "pallas_mode": backend.get("pallas_mode"),
+            "entries": [
+                {"task": e["task"], "backend": e["backend"],
+                 "mode": e["mode"],
+                 "solves_per_s": e["solves_per_s"],
+                 "req_per_s": e["req_per_s"]}
+                for e in backend.get("entries", [])]}
     with open(path, "w") as f:
         json.dump(summary, f, indent=1, default=float)
     return summary
@@ -101,6 +113,10 @@ def main() -> None:
     if want("tasks"):
         from benchmarks import task_bench
         rows += task_bench.run(full=full)
+        _flush(rows)
+    if want("backend"):
+        from benchmarks import precision_backend_bench
+        rows += precision_backend_bench.run(full=full)
         _flush(rows)
     if want("service"):
         from benchmarks import service_bench

@@ -64,16 +64,20 @@ def solve_fixed_batch(A_rows: Sequence[np.ndarray],
                       b_rows: Sequence[np.ndarray],
                       x_rows: Sequence[np.ndarray],
                       action_rows: Sequence[np.ndarray],
-                      ir_cfg: IRConfig, chunk: int) -> List[SolveRecord]:
+                      ir_cfg: IRConfig, chunk: int,
+                      backend=None) -> List[SolveRecord]:
     """One fixed-shape `gmres_ir_batch` call over already-padded rows.
 
     All rows must share one padded size n_pad; the batch dimension is padded
     to exactly `chunk` rows by repeating row 0, keeping the compiled shape
     constant. Returns one SolveRecord per *input* row (pad rows dropped).
+    `backend` selects the precision backend (DESIGN.md §6); the solver
+    entry point coerces rows to the backend's carrier dtype.
     """
     from repro.tasks.base import stack_fixed
     A, b, x, acts, k = stack_fixed(list(zip(A_rows, b_rows, x_rows)),
                                    action_rows, chunk)
     stats = gmres_ir_batch(jnp.asarray(A), jnp.asarray(b), jnp.asarray(x),
-                           jnp.asarray(acts, jnp.int32), ir_cfg)
+                           jnp.asarray(acts, jnp.int32), ir_cfg,
+                           backend=backend)
     return records_from_stats(stats, k)

@@ -7,7 +7,8 @@ import numpy as np
 
 from repro.kernels.chop.ops import _FMT_PACKED
 
-from .qmatmul import DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, qmatmul_pallas
+from .qmatmul import (DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, LANE, QMV_BM,
+                      qmatmul_pallas, qmv_pallas)
 
 
 def make_fmt_params(fmt_id, chop_out: bool = True) -> jnp.ndarray:
@@ -23,6 +24,31 @@ def _pad_to(x, m0, m1):
     if p0 or p1:
         x = jnp.pad(x, ((0, p0), (0, p1)))
     return x
+
+
+def qmv_op(a: jnp.ndarray, v: jnp.ndarray, fmt_id, *,
+           chop_out: bool = True, bm: int | None = None,
+           interpret: bool | None = None) -> jnp.ndarray:
+    """Fused chopped matvec for arbitrary (M, K) x (K,) f32 operands.
+
+    Pads K to the LANE multiple shared with `ref.qmv_ref` (the reduction
+    shape is part of the bit-exactness contract, DESIGN.md §6.2) and M to
+    the row-block multiple, then runs the single-K-block row-sum kernel.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if a.dtype != jnp.float32 or v.dtype != jnp.float32:
+        raise TypeError("qmv_op targets the f32 TPU carrier; got "
+                        f"{a.dtype} x {v.dtype}")
+    M, K = a.shape
+    bm = min(bm or QMV_BM,
+             max(LANE, 1 << int(np.ceil(np.log2(max(M, 1))))))
+    Kp = -(-K // LANE) * LANE
+    ap = _pad_to(a, bm, LANE)
+    vp = jnp.pad(v, (0, Kp - K)).reshape(1, Kp)
+    out = qmv_pallas(ap, vp, make_fmt_params(fmt_id, chop_out),
+                     bm=bm, interpret=interpret)
+    return out[:M]
 
 
 def qmatmul_op(a: jnp.ndarray, b: jnp.ndarray, fmt_id, *,

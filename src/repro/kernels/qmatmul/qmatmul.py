@@ -24,6 +24,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.precision.chop import _chop_core
 
+from .ref import LANE
+
 DEFAULT_BM = 256
 DEFAULT_BN = 256
 DEFAULT_BK = 256
@@ -49,6 +51,58 @@ def _qmatmul_kernel(fmt_ref, a_ref, b_ref, o_ref, acc_ref):
         acc = acc_ref[...]
         chopped = _chop_core(acc, t, emin, 0, xmax_bits, saturate)
         o_ref[...] = jnp.where(fmt_ref[4] != 0, chopped, acc)
+
+
+QMV_BM = 256  # rows of A per grid step (multiple of LANE)
+
+
+def _qmv_kernel(fmt_ref, a_ref, v_ref, o_ref):
+    """Fused chopped matvec tile: chop operands in VMEM, multiply, row-sum.
+
+    fmt_ref (SMEM): int32[5] = [t, emin, xmax_bits, saturate, chop_out].
+    a_ref: (bm, Kp) tile of A; v_ref: (1, Kp); o_ref: (bm // LANE, LANE).
+
+    The reduction is the VPU-friendly row-sum over the full (lane-padded)
+    K axis in one block — deliberately NOT an MXU dot: a matvec is
+    memory-bound, and the single-block row-sum gives the jnp oracle
+    (`ref.qmv_ref`) an identical reduction shape, which is what makes the
+    backend dispatch layer bit-exact across implementations
+    (DESIGN.md §6.2). Per-row reductions are invariant to tiling over
+    rows, so the grid over M does not perturb results.
+    """
+    t = fmt_ref[0]
+    emin = fmt_ref[1]
+    xmax_bits = fmt_ref[2].astype(jnp.uint32)
+    saturate = fmt_ref[3] != 0
+    a = _chop_core(a_ref[...], t, emin, 0, xmax_bits, saturate)
+    v = _chop_core(v_ref[...], t, emin, 0, xmax_bits, saturate)
+    out = jnp.sum(a * v, axis=1)                       # carrier accumulation
+    chopped = _chop_core(out, t, emin, 0, xmax_bits, saturate)
+    out = jnp.where(fmt_ref[4] != 0, chopped, out)
+    o_ref[...] = out.reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def qmv_pallas(a: jnp.ndarray, v: jnp.ndarray, fmt_params: jnp.ndarray,
+               *, bm: int = QMV_BM, interpret: bool = True) -> jnp.ndarray:
+    """a: (Mp, Kp) f32, v: (1, Kp) f32 — padded by ops.qmv_op so that
+    Mp % bm == 0, Kp % LANE == 0, bm % LANE == 0. fmt_params: int32[5].
+    Returns the fused chopped matvec as (Mp,)."""
+    M, K = a.shape
+    assert M % bm == 0 and K % LANE == 0 and bm % LANE == 0
+    out = pl.pallas_call(
+        _qmv_kernel,
+        grid=(M // bm,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm // LANE, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M // LANE, LANE), jnp.float32),
+        interpret=interpret,
+    )(fmt_params, a, v)
+    return out.reshape(M)
 
 
 @functools.partial(jax.jit,

@@ -6,6 +6,34 @@ import jax.numpy as jnp
 
 from repro.precision import chop
 
+# TPU lane width. Single source of truth for the K padding that both the
+# pallas kernel (qmatmul.qmv_pallas via ops.qmv_op) and this oracle
+# apply: identical reduction shape is the bit-exactness contract
+# (DESIGN.md §6.2). Defined here so the oracle stays pallas-free.
+LANE = 128
+
+
+def qmv_ref(a: jnp.ndarray, v: jnp.ndarray, fmt_id,
+            chop_out: bool = True) -> jnp.ndarray:
+    """Bit-exact jnp oracle for the fused chopped matvec (`ops.qmv_op`).
+
+    Shares the kernel's reduction shape: K is zero-padded to the LANE
+    multiple and reduced with one row-sum in the f32 carrier (per-row
+    reductions are tiling-invariant over rows, but NOT over reduction
+    length — hence the shared padding; DESIGN.md §6.2). Works on any
+    float carrier; the pallas kernel itself is f32-only.
+    """
+    K = a.shape[-1]
+    Kp = -(-K // LANE) * LANE
+    ap = jnp.pad(a, ((0, 0), (0, Kp - K)))
+    vp = jnp.pad(v, (0, Kp - K))
+    ac = chop(ap, fmt_id)
+    vc = chop(vp, fmt_id)
+    out = jnp.sum(ac * vc[None, :], axis=1)        # carrier accumulation
+    if chop_out:
+        out = chop(out, fmt_id)
+    return out
+
 
 def qmatmul_ref(a: jnp.ndarray, b: jnp.ndarray, fmt_id,
                 chop_out: bool = True) -> jnp.ndarray:

@@ -1,4 +1,8 @@
-"""Precision substrate: format descriptors + round-to-format emulation."""
+"""Precision substrate: format descriptors, round-to-format emulation,
+and the backend dispatch layer (DESIGN.md §6)."""
+from .backend import (JnpBackend, PallasBackend, PrecisionBackend,
+                      available_backends, default_backend, register_backend,
+                      resolve_backend, set_default_backend)
 from .chop import (chop, chop_matmul, chop_static, chop_stochastic,
                    chop_tree, rounding_unit, simulate_dtype)
 from .formats import (BF16, E4M3, E5M2, FORMAT_ID, FORMAT_LIST, FORMATS, FP16,
@@ -10,4 +14,7 @@ __all__ = [
     "simulate_dtype", "FloatFormat", "get_format", "format_id",
     "FORMATS", "FORMAT_LIST", "FORMAT_ID", "SOLVER_LADDER", "TPU_LADDER",
     "BF16", "FP16", "TF32", "FP32", "FP64", "E4M3", "E5M2", "runtime_tables",
+    "PrecisionBackend", "JnpBackend", "PallasBackend", "resolve_backend",
+    "default_backend", "set_default_backend", "register_backend",
+    "available_backends",
 ]

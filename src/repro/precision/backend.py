@@ -1,0 +1,221 @@
+"""Precision backend dispatch: one signature, two implementations
+(DESIGN.md §6).
+
+Every precision action the bandit selects is *applied* by three ops on
+the solver hot path: an elementwise round-to-format (`chop`), a fused
+chopped matvec (`chop_mv`), and a fused chopped matmul (`chop_matmul`).
+This module gives those ops a backend-agnostic home:
+
+  * ``"jnp"``   — the pure-jnp oracle (`repro.precision.chop`), valid on
+    any float carrier (f64 for the paper's host experiments);
+  * ``"pallas"``— the Pallas TPU kernels (`kernels/chop`,
+    `kernels/qmatmul`), f32 carrier, VMEM-resident rounding with no
+    extra HBM round trips. Off-TPU, selecting ``"pallas"`` falls back
+    to ``"jnp"`` (the interpreter is a correctness tool, not a fast
+    path); ``"pallas-interpret"`` forces the kernels through the Pallas
+    interpreter for CPU bit-exactness testing.
+
+Backends are small frozen dataclasses, so they hash by value and can be
+passed as **static jit arguments**: the solvers compile once per
+(shapes, config, backend) while the format id stays runtime data —
+switching precision actions never recompiles (DESIGN.md §3.4), and
+switching backends costs exactly one extra executable.
+
+Bit-exactness contract (DESIGN.md §6.2): for a shared f32 carrier, both
+backends produce bit-identical results for `chop` (same integer RNE
+algorithm elementwise) and `chop_mv` (shared lane-padded row-sum
+reduction shape). `chop_matmul` agrees within f32 accumulation-order
+noise only (MXU tile order is not reproduced by a plain `jnp.dot`).
+
+Selection order: explicit argument > `set_default_backend` >
+``REPRO_PRECISION_BACKEND`` env var > ``"jnp"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from typing import Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import chop as _chop
+
+ENV_VAR = "REPRO_PRECISION_BACKEND"
+
+# Arrays smaller than this bypass the pallas chop kernel: the O(n) glue
+# vectors inside solver loops are launch-overhead-bound, and the two
+# implementations are bit-identical, so routing is a pure perf choice.
+DEFAULT_CHOP_MIN_ELEMS = 4096
+
+
+class PrecisionBackend:
+    """Interface shared by all precision backends (duck-typed; this base
+    class only documents the contract and hosts shared helpers).
+
+    `carrier_dtype` is the float dtype the backend's solver entry points
+    coerce operands to (None = keep the caller's carrier)."""
+
+    name: str = "abstract"
+    carrier_dtype: Optional[str] = None
+
+    def chop(self, x: jnp.ndarray, fmt_id) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def chop_mv(self, A: jnp.ndarray, v: jnp.ndarray, fmt_id, *,
+                chop_output: bool = True) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def chop_matmul(self, a: jnp.ndarray, b: jnp.ndarray, fmt_id, *,
+                    chop_inputs: bool = True,
+                    chop_output: bool = True) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def coerce(self, *arrays: jnp.ndarray):
+        """Cast float arrays to this backend's carrier dtype (no-op when
+        `carrier_dtype` is None)."""
+        if self.carrier_dtype is None:
+            return arrays if len(arrays) != 1 else arrays[0]
+        dt = jnp.dtype(self.carrier_dtype)
+        out = tuple(a.astype(dt) if jnp.issubdtype(jnp.asarray(a).dtype,
+                                                   jnp.floating) else a
+                    for a in arrays)
+        return out if len(out) != 1 else out[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class JnpBackend(PrecisionBackend):
+    """Pure-jnp oracle backend: the paper-faithful reference semantics on
+    any float carrier. This is the default and the ground truth the
+    pallas backend is bit-validated against."""
+
+    name: str = dataclasses.field(default="jnp", init=False)
+    carrier_dtype: Optional[str] = None
+
+    def chop(self, x, fmt_id):
+        return _chop.chop(x, fmt_id)
+
+    def chop_mv(self, A, v, fmt_id, *, chop_output: bool = True):
+        # Same reduction shape as kernels/qmatmul.qmv_op: lane-padded
+        # row-sum (see ref.qmv_ref; the import is deferred so that
+        # importing repro.precision never pulls in pallas).
+        from repro.kernels.qmatmul.ref import qmv_ref
+        return qmv_ref(A, v, fmt_id, chop_out=chop_output)
+
+    def chop_matmul(self, a, b, fmt_id, *, chop_inputs: bool = True,
+                    chop_output: bool = True):
+        return _chop.chop_matmul(a, b, fmt_id, chop_inputs=chop_inputs,
+                                 chop_output=chop_output)
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend(PrecisionBackend):
+    """Pallas TPU fast path: `kernels/chop` for standalone roundings,
+    `kernels/qmatmul` for the fused matvec/matmul. f32 carrier only —
+    solver entry points coerce operands via `carrier_dtype`.
+
+    `interpret=None` auto-selects the Pallas interpreter off-TPU (the
+    compiled path on TPU); `chop_min_elems` routes small glue arrays to
+    the bit-identical jnp chop to avoid kernel launch overhead."""
+
+    name: str = dataclasses.field(default="pallas", init=False)
+    carrier_dtype: Optional[str] = "float32"
+    interpret: Optional[bool] = None
+    chop_min_elems: int = DEFAULT_CHOP_MIN_ELEMS
+
+    def chop(self, x, fmt_id):
+        x = jnp.asarray(x)
+        if x.dtype != jnp.float32 or x.size < self.chop_min_elems:
+            return _chop.chop(x, fmt_id)
+        from repro.kernels.chop import chop_op
+        return chop_op(x, fmt_id, interpret=self.interpret)
+
+    def chop_mv(self, A, v, fmt_id, *, chop_output: bool = True):
+        from repro.kernels.qmatmul import qmv_op
+        return qmv_op(A, v, fmt_id, chop_out=chop_output,
+                      interpret=self.interpret)
+
+    def chop_matmul(self, a, b, fmt_id, *, chop_inputs: bool = True,
+                    chop_output: bool = True):
+        if not chop_inputs:
+            # The fused kernel always rounds its operands in VMEM; the
+            # unfused variant exists only for pre-chopped jnp callers.
+            return _chop.chop_matmul(a, b, fmt_id, chop_inputs=False,
+                                     chop_output=chop_output)
+        from repro.kernels.qmatmul import qmatmul_op
+        return qmatmul_op(a, b, fmt_id, chop_out=chop_output,
+                          interpret=self.interpret)
+
+
+# ---------------------------------------------------------------------------
+# Registry + selection
+# ---------------------------------------------------------------------------
+
+BackendLike = Union[None, str, PrecisionBackend]
+
+_REGISTRY: Dict[str, Callable[[], PrecisionBackend]] = {
+    "jnp": JnpBackend,
+    "pallas": PallasBackend,
+    "pallas-interpret": lambda: PallasBackend(interpret=True),
+}
+_DEFAULT: Optional[PrecisionBackend] = None
+_WARNED_FALLBACK = False
+
+
+def register_backend(name: str,
+                     factory: Callable[[], PrecisionBackend]) -> None:
+    """Register a backend factory under `name` (overwrites allowed)."""
+    _REGISTRY[name] = factory
+
+
+def available_backends():
+    return sorted(_REGISTRY)
+
+
+def _from_name(name: str) -> PrecisionBackend:
+    global _WARNED_FALLBACK
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown precision backend {name!r}; "
+                       f"available: {available_backends()}")
+    backend = _REGISTRY[name]()
+    if (name == "pallas" and backend.interpret is None
+            and jax.default_backend() != "tpu"):
+        # Fast path requested without TPU hardware: interpret mode would
+        # be orders of magnitude slower than jnp, so serve jnp instead.
+        if not _WARNED_FALLBACK:
+            warnings.warn(
+                "precision backend 'pallas' requested off-TPU; falling "
+                "back to 'jnp' (use 'pallas-interpret' to force the "
+                "Pallas interpreter, e.g. for bit-exactness tests)",
+                stacklevel=3)
+            _WARNED_FALLBACK = True
+        return _REGISTRY["jnp"]()
+    return backend
+
+
+def set_default_backend(backend: BackendLike) -> Optional[PrecisionBackend]:
+    """Set the process-wide default backend (None restores env/'jnp'
+    resolution). Returns the previous override, for save/restore."""
+    global _DEFAULT
+    prev = _DEFAULT
+    _DEFAULT = (resolve_backend(backend)
+                if backend is not None else None)
+    return prev
+
+
+def default_backend() -> PrecisionBackend:
+    if _DEFAULT is not None:
+        return _DEFAULT
+    return _from_name(os.environ.get(ENV_VAR, "jnp"))
+
+
+def resolve_backend(backend: BackendLike = None) -> PrecisionBackend:
+    """Coerce a backend spec (instance | name | None=default) into a
+    backend instance. Pure Python — call before tracing so the result
+    can be a static jit argument."""
+    if backend is None:
+        return default_backend()
+    if isinstance(backend, str):
+        return _from_name(backend)
+    return backend

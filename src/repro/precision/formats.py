@@ -81,7 +81,7 @@ FORMAT_ID: Dict[str, int] = {f.name: i for i, f in enumerate(FORMAT_LIST)}
 # The paper's solver precision ladder (Section 5.1), ordered by increasing
 # significand bits — the ordering relation of Eq. 11.
 SOLVER_LADDER: List[str] = ["bf16", "tf32", "fp32", "fp64"]
-# The TPU-native ladder used by the LM-framework integration (§3.3 DESIGN).
+# The TPU-native ladder used by the LM-framework integration (DESIGN.md §3.3).
 TPU_LADDER: List[str] = ["e4m3", "bf16", "fp32"]
 
 

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.precision import chop, rounding_unit
+from repro.precision import resolve_backend, rounding_unit
 
 from .gmres import chop_mv
 from .ir import CONVERGED, FAILED, MAXITER, STAGNATED
@@ -69,24 +69,29 @@ def _inf_norm(v):
     return jnp.max(jnp.abs(v))
 
 
-def _dot(a, b, fmt_id):
+def _dot(a, b, fmt_id, chop):
     """Dot product with format-rounded products, carrier accumulation."""
     return chop(jnp.sum(chop(a * b, fmt_id)), fmt_id)
 
 
 def pcg(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
-        r: jnp.ndarray, fmt_g, *, m_max: int, tol: float) -> PCGResult:
+        r: jnp.ndarray, fmt_g, *, m_max: int, tol: float,
+        backend=None) -> PCGResult:
     """LU-preconditioned CG on A z = r, entirely in precision u_g.
 
     A_g: the system matrix pre-chopped to u_g; LU/perm: chopped factors
     of A in u_f, used as the (fixed) preconditioner.
     """
+    bk = resolve_backend(backend)
+    A_g, LU, r = bk.coerce(jnp.asarray(A_g), jnp.asarray(LU),
+                           jnp.asarray(r))
+    chop = bk.chop
     dtype = r.dtype
     r0 = chop(r, fmt_g)
     beta0 = jnp.linalg.norm(r0)
     ok0 = jnp.isfinite(beta0) & (beta0 > 0)
-    y0 = lu_solve(LU, perm, r0, fmt_g)
-    rho0 = _dot(r0, y0, fmt_g)
+    y0 = lu_solve(LU, perm, r0, fmt_g, backend=bk)
+    rho0 = _dot(r0, y0, fmt_g, chop)
     z0 = jnp.zeros_like(r0)
 
     def cond(state):
@@ -95,8 +100,8 @@ def pcg(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
 
     def body(state):
         z, rin, p, rho, j, done, fail = state
-        q = chop_mv(A_g, p, fmt_g)
-        pq = _dot(p, q, fmt_g)
+        q = bk.chop_mv(A_g, p, fmt_g)
+        pq = _dot(p, q, fmt_g, chop)
         # Non-positive curvature: A (or the chopped recurrence) stopped
         # behaving SPD — a genuine CG breakdown, not mere stagnation.
         breakdown = (pq <= 0) | ~jnp.isfinite(pq)
@@ -105,8 +110,8 @@ def pcg(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
         z_new = chop(z + chop(alpha * p, fmt_g), fmt_g)
         rin_new = chop(rin - chop(alpha * q, fmt_g), fmt_g)
         res = jnp.linalg.norm(rin_new)
-        y = lu_solve(LU, perm, rin_new, fmt_g)
-        rho_new = _dot(rin_new, y, fmt_g)
+        y = lu_solve(LU, perm, rin_new, fmt_g, backend=bk)
+        rho_new = _dot(rin_new, y, fmt_g, chop)
         rho_safe = jnp.where(rho == 0, jnp.ones((), dtype), rho)
         beta = chop(rho_new / rho_safe, fmt_g)
         p_new = chop(y + chop(beta * p, fmt_g), fmt_g)
@@ -126,17 +131,12 @@ def pcg(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
     return PCGResult(z, j, fail)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def cg_ir(A: jnp.ndarray, b: jnp.ndarray, x_true: jnp.ndarray,
-          action: jnp.ndarray, cfg: CGConfig = CGConfig()) -> CGStats:
-    """Solve A x = b with CG-IR under precision action (u_f, u, u_g, u_r).
-
-    A: (n, n) float64 carrier (SPD); action: int32[4] runtime format ids.
-    """
+def _cg_ir_impl(A, b, x_true, action, cfg, backend) -> CGStats:
     dtype = A.dtype
+    chop = backend.chop
     uf, u, ug, ur = action[0], action[1], action[2], action[3]
 
-    lu = lu_factor(A, uf)
+    lu = lu_factor(A, uf, backend=backend)
     A_g = chop(A, ug)
     A_r = chop(A, ur)
     b_r = chop(b, ur)
@@ -151,9 +151,9 @@ def cg_ir(A: jnp.ndarray, b: jnp.ndarray, x_true: jnp.ndarray,
 
     def body(state):
         x, znorm_prev, i, n_cg, status, done = state
-        r = chop(b_r - chop_mv(A_r, x, ur), ur)
+        r = chop(b_r - chop_mv(A_r, x, ur, backend=backend), ur)
         cg = pcg(A_g, lu.lu, lu.perm, r, ug,
-                 m_max=cfg.m_max, tol=cfg.tol_inner)
+                 m_max=cfg.m_max, tol=cfg.tol_inner, backend=backend)
         z = chop(cg.z, u)
         x_new = chop(x + z, u)
         znorm = _inf_norm(z)
@@ -190,10 +190,42 @@ def cg_ir(A: jnp.ndarray, b: jnp.ndarray, x_true: jnp.ndarray,
     return CGStats(ferr, nbe, n_outer, n_cg, status, res_norm)
 
 
-# Batched entry point: one fixed-shape chunk = one call.
-cg_ir_batch = jax.jit(
-    jax.vmap(cg_ir, in_axes=(0, 0, 0, 0, None)),
-    static_argnames=("cfg",))
+# Backend resolved before tracing, passed value-hashed static: one
+# executable per (shapes, cfg, backend), format ids runtime data
+# (DESIGN.md §3.4, §6.3). Module-level jits so tests can assert the
+# compile-cache stays at one across precision actions.
+_cg_ir_jit = partial(jax.jit, static_argnames=("cfg", "backend"))(
+    _cg_ir_impl)
+
+
+@partial(jax.jit, static_argnames=("cfg", "backend"))
+def _cg_ir_batch_jit(A, b, x_true, actions, cfg, backend) -> CGStats:
+    return jax.vmap(lambda Ai, bi, xi, ai:
+                    _cg_ir_impl(Ai, bi, xi, ai, cfg, backend)
+                    )(A, b, x_true, actions)
+
+
+def cg_ir(A: jnp.ndarray, b: jnp.ndarray, x_true: jnp.ndarray,
+          action: jnp.ndarray, cfg: CGConfig = CGConfig(),
+          backend=None) -> CGStats:
+    """Solve A x = b with CG-IR under precision action (u_f, u, u_g, u_r).
+
+    A: (n, n) carrier (SPD; float64 on the host, f32 when the pallas
+    backend coerces); action: int32[4] runtime format ids. `backend`
+    selects the precision backend (DESIGN.md §6)."""
+    bk = resolve_backend(backend)
+    A, b, x_true = bk.coerce(jnp.asarray(A), jnp.asarray(b),
+                             jnp.asarray(x_true))
+    return _cg_ir_jit(A, b, x_true, action, cfg, bk)
+
+
+def cg_ir_batch(A, b, x_true, actions, cfg: CGConfig = CGConfig(),
+                backend=None) -> CGStats:
+    """Batched (vmap) CG-IR: one fixed-shape chunk = one call."""
+    bk = resolve_backend(backend)
+    A, b, x_true = bk.coerce(jnp.asarray(A), jnp.asarray(b),
+                             jnp.asarray(x_true))
+    return _cg_ir_batch_jit(A, b, x_true, actions, cfg, bk)
 
 
 # Re-exported status codes (shared convention with ir.py / core.task).

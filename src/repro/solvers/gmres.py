@@ -7,6 +7,13 @@ least-squares recurrence are all executed with op-level rounding to the
 runtime format id. Accumulations happen in the carrier dtype (MXU-style),
 see DESIGN.md §3.5.
 
+The hot-path rounding ops dispatch through a precision backend
+(DESIGN.md §6): `chop_mv` is the backend's fused chopped matvec
+(kernels/qmatmul on the pallas backend) and standalone roundings go
+through `backend.chop` (kernels/chop for large arrays). The backend is
+resolved before tracing and is a value-hashed static, so format ids stay
+runtime data and precision actions never recompile (DESIGN.md §3.4).
+
 Non-restarted, with a while_loop bounded by m_max; the residual estimate is
 the standard |g_{j+1}| Givens recurrence, relative to the preconditioned
 initial residual norm beta.
@@ -18,7 +25,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 from jax import lax
 
-from repro.precision import chop
+from repro.precision import resolve_backend
 
 from .triangular import solve_unit_lower, solve_upper
 
@@ -30,30 +37,39 @@ class GMRESResult(NamedTuple):
     fail: jnp.ndarray     # non-finite breakdown
 
 
-def chop_mv(A_chopped: jnp.ndarray, v: jnp.ndarray, fmt_id) -> jnp.ndarray:
-    """Matrix-vector product with format-rounded products and result;
-    accumulation in the carrier (FMA/MXU semantics). A must be pre-chopped."""
-    prods = chop(A_chopped * v[None, :], fmt_id)
-    return chop(jnp.sum(prods, axis=1), fmt_id)
+def chop_mv(A: jnp.ndarray, v: jnp.ndarray, fmt_id,
+            backend=None) -> jnp.ndarray:
+    """Fused chopped matvec: operands rounded to the format, accumulation
+    in the carrier, result rounded (FMA/MXU semantics — the matvec
+    instantiation of kernels/qmatmul; see DESIGN.md §6.2). Operands are
+    coerced to the backend's carrier dtype (no-op on the jnp oracle and
+    on pre-coerced arrays)."""
+    bk = resolve_backend(backend)
+    A, v = bk.coerce(jnp.asarray(A), jnp.asarray(v))
+    return bk.chop_mv(A, v, fmt_id)
 
 
-def _precond(LU, perm, v, fmt_id):
-    y = solve_unit_lower(LU, v[perm], fmt_id)
-    return solve_upper(LU, y, fmt_id)
+def _precond(LU, perm, v, fmt_id, backend):
+    y = solve_unit_lower(LU, v[perm], fmt_id, backend=backend)
+    return solve_upper(LU, y, fmt_id, backend=backend)
 
 
 def gmres_precond(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
                   r: jnp.ndarray, fmt_g, *, m_max: int,
-                  tol: float) -> GMRESResult:
+                  tol: float, backend=None) -> GMRESResult:
     """A_g: the system matrix pre-chopped to u_g. r: outer residual."""
+    bk = resolve_backend(backend)
+    A_g, LU, r = bk.coerce(jnp.asarray(A_g), jnp.asarray(LU),
+                           jnp.asarray(r))
+    chop = bk.chop
     n = r.shape[-1]
     dtype = r.dtype
     zero = jnp.zeros((), dtype)
 
     def apply_op(v):
-        return _precond(LU, perm, chop_mv(A_g, v, fmt_id=fmt_g), fmt_g)
+        return _precond(LU, perm, bk.chop_mv(A_g, v, fmt_g), fmt_g, bk)
 
-    rhat = _precond(LU, perm, chop(r, fmt_g), fmt_g)
+    rhat = _precond(LU, perm, chop(r, fmt_g), fmt_g, bk)
     beta = jnp.linalg.norm(rhat)
     ok0 = jnp.isfinite(beta) & (beta > 0)
     beta_safe = jnp.where(ok0, beta, jnp.ones((), dtype))

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.precision import chop, rounding_unit
+from repro.precision import resolve_backend, rounding_unit
 
 from .gmres import chop_mv, gmres_precond
 from .lu import lu_factor
@@ -66,23 +66,18 @@ def _inf_norm(v):
     return jnp.max(jnp.abs(v))
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def gmres_ir(A: jnp.ndarray, b: jnp.ndarray, x_true: jnp.ndarray,
-             action: jnp.ndarray, cfg: IRConfig = IRConfig()) -> SolveStats:
-    """Solve A x = b with GMRES-IR under precision action (u_f, u, u_g, u_r).
-
-    A: (n, n) float64 carrier; action: int32[4] runtime format ids.
-    """
+def _gmres_ir_impl(A, b, x_true, action, cfg, backend) -> SolveStats:
     dtype = A.dtype
+    chop = backend.chop
     uf, u, ug, ur = action[0], action[1], action[2], action[3]
 
-    lu = lu_factor(A, uf)
+    lu = lu_factor(A, uf, backend=backend)
     A_g = chop(A, ug)
     A_r = chop(A, ur)
     b_r = chop(b, ur)
 
     if cfg.init == "lu":
-        x0 = lu_solve(lu.lu, lu.perm, b, uf)
+        x0 = lu_solve(lu.lu, lu.perm, b, uf, backend=backend)
         x0 = jnp.where(jnp.isfinite(x0), x0, jnp.zeros_like(x0))
     else:
         x0 = jnp.zeros_like(b)
@@ -96,9 +91,10 @@ def gmres_ir(A: jnp.ndarray, b: jnp.ndarray, x_true: jnp.ndarray,
 
     def body(state):
         x, znorm_prev, i, n_gmres, status, done = state
-        r = chop(b_r - chop_mv(A_r, x, ur), ur)
+        r = chop(b_r - chop_mv(A_r, x, ur, backend=backend), ur)
         gm = gmres_precond(A_g, lu.lu, lu.perm, r, ug,
-                           m_max=cfg.m_max, tol=cfg.tol_inner)
+                           m_max=cfg.m_max, tol=cfg.tol_inner,
+                           backend=backend)
         z = chop(gm.z, u)
         x_new = chop(x + z, u)
         znorm = _inf_norm(z)
@@ -136,7 +132,42 @@ def gmres_ir(A: jnp.ndarray, b: jnp.ndarray, x_true: jnp.ndarray,
     return SolveStats(ferr, nbe, n_outer, n_gmres, status, res_norm)
 
 
-# Batched entry point: one episode sweep = one call.
-gmres_ir_batch = jax.jit(
-    jax.vmap(gmres_ir, in_axes=(0, 0, 0, 0, None)),
-    static_argnames=("cfg",))
+# The backend is resolved *before* tracing and passed as a value-hashed
+# static argument: one executable per (shapes, cfg, backend), with the
+# action's format ids still runtime data (DESIGN.md §3.4, §6.3). The
+# jitted inner functions are module-level so tests can assert their
+# compile-cache size stays at one across precision actions.
+_gmres_ir_jit = partial(jax.jit, static_argnames=("cfg", "backend"))(
+    _gmres_ir_impl)
+
+
+@partial(jax.jit, static_argnames=("cfg", "backend"))
+def _gmres_ir_batch_jit(A, b, x_true, actions, cfg, backend) -> SolveStats:
+    return jax.vmap(lambda Ai, bi, xi, ai:
+                    _gmres_ir_impl(Ai, bi, xi, ai, cfg, backend)
+                    )(A, b, x_true, actions)
+
+
+def gmres_ir(A: jnp.ndarray, b: jnp.ndarray, x_true: jnp.ndarray,
+             action: jnp.ndarray, cfg: IRConfig = IRConfig(),
+             backend=None) -> SolveStats:
+    """Solve A x = b with GMRES-IR under precision action (u_f, u, u_g, u_r).
+
+    A: (n, n) carrier (float64 for the paper's host experiments; the
+    pallas backend coerces to its f32 TPU carrier); action: int32[4]
+    runtime format ids. `backend` selects the precision backend
+    (DESIGN.md §6): an instance, a registry name, or None = default.
+    """
+    bk = resolve_backend(backend)
+    A, b, x_true = bk.coerce(jnp.asarray(A), jnp.asarray(b),
+                             jnp.asarray(x_true))
+    return _gmres_ir_jit(A, b, x_true, action, cfg, bk)
+
+
+def gmres_ir_batch(A, b, x_true, actions, cfg: IRConfig = IRConfig(),
+                   backend=None) -> SolveStats:
+    """Batched (vmap) GMRES-IR: one episode sweep = one call."""
+    bk = resolve_backend(backend)
+    A, b, x_true = bk.coerce(jnp.asarray(A), jnp.asarray(b),
+                             jnp.asarray(x_true))
+    return _gmres_ir_batch_jit(A, b, x_true, actions, cfg, bk)

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.precision import chop
+from repro.precision import resolve_backend
 
 
 class LUFactors(NamedTuple):
@@ -32,8 +32,9 @@ class LUFactors(NamedTuple):
     fail: jnp.ndarray     # bool: zero pivot or non-finite (overflow) factor
 
 
-def lu_factor(A: jnp.ndarray, fmt_id) -> LUFactors:
+def lu_factor(A: jnp.ndarray, fmt_id, backend=None) -> LUFactors:
     """Chopped right-looking LU with partial pivoting. A: (n, n) carrier."""
+    chop = resolve_backend(backend).chop
     n = A.shape[-1]
     rows = jnp.arange(n)
     A0 = chop(A, fmt_id)
@@ -68,10 +69,12 @@ def lu_factor(A: jnp.ndarray, fmt_id) -> LUFactors:
     return LUFactors(A1, perm, fail)
 
 
-def lu_factor_blocked(A: jnp.ndarray, fmt_id, block: int = 32) -> LUFactors:
+def lu_factor_blocked(A: jnp.ndarray, fmt_id, block: int = 32,
+                      backend=None) -> LUFactors:
     """Blocked variant: strict panel factorization + chopped-GEMM trailing
     update (MXU semantics). Pivoting is restricted to the panel (standard
     blocked partial pivoting). Requires n % block == 0."""
+    chop = resolve_backend(backend).chop
     n = A.shape[-1]
     assert n % block == 0, "pad to a multiple of the block size"
     rows = jnp.arange(n)

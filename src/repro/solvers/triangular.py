@@ -2,18 +2,23 @@
 
 Per-row semantics: products rounded to the target format, row-dot
 accumulated in the carrier, one rounding on the subtraction and one on the
-division — FMA-style op-level emulation (DESIGN.md §3.5).
+division — FMA-style op-level emulation (DESIGN.md §3.5). Roundings
+dispatch through the precision backend (DESIGN.md §6); the per-row
+vectors are small, so every backend routes them to the bit-identical
+jnp chop and the two backends stay exact here by construction.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 from jax import lax
 
-from repro.precision import chop
+from repro.precision import resolve_backend
 
 
-def solve_unit_lower(LU: jnp.ndarray, b: jnp.ndarray, fmt_id) -> jnp.ndarray:
+def solve_unit_lower(LU: jnp.ndarray, b: jnp.ndarray, fmt_id,
+                     backend=None) -> jnp.ndarray:
     """Solve L y = b where L is unit-lower (strict lower triangle of LU)."""
+    chop = resolve_backend(backend).chop
     n = LU.shape[-1]
     idx = jnp.arange(n)
     b = chop(b, fmt_id)
@@ -28,8 +33,10 @@ def solve_unit_lower(LU: jnp.ndarray, b: jnp.ndarray, fmt_id) -> jnp.ndarray:
     return lax.fori_loop(0, n, step, jnp.zeros_like(b))
 
 
-def solve_upper(LU: jnp.ndarray, y: jnp.ndarray, fmt_id) -> jnp.ndarray:
+def solve_upper(LU: jnp.ndarray, y: jnp.ndarray, fmt_id,
+                backend=None) -> jnp.ndarray:
     """Solve U x = y where U is the upper triangle (incl. diagonal) of LU."""
+    chop = resolve_backend(backend).chop
     n = LU.shape[-1]
     idx = jnp.arange(n)
     y = chop(y, fmt_id)
@@ -48,8 +55,9 @@ def solve_upper(LU: jnp.ndarray, y: jnp.ndarray, fmt_id) -> jnp.ndarray:
 
 
 def lu_solve(LU: jnp.ndarray, perm: jnp.ndarray, b: jnp.ndarray,
-             fmt_id) -> jnp.ndarray:
+             fmt_id, backend=None) -> jnp.ndarray:
     """Solve A x = b given chopped LU factors: x = U \\ (L \\ (P b))."""
+    bk = resolve_backend(backend)
     pb = b[perm]
-    y = solve_unit_lower(LU, pb, fmt_id)
-    return solve_upper(LU, y, fmt_id)
+    y = solve_unit_lower(LU, pb, fmt_id, backend=bk)
+    return solve_upper(LU, y, fmt_id, backend=bk)

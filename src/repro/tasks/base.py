@@ -20,6 +20,7 @@ from repro.core.features import PAPER_FEATURES, feature_vector
 from repro.core.rewards import reward as reward_fn
 from repro.core.task import Outcome, bucket_of
 from repro.data.matrices import LinearSystem, pad_system
+from repro.precision import resolve_backend
 
 
 def stack_fixed(rows: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
@@ -46,6 +47,12 @@ class LinearSystemTask:
     `action_space` may be None for serving-only adapters; the server
     injects the promoted policy snapshot's space before any reward is
     computed.
+
+    `backend` selects the precision backend the batched solver runs on
+    (DESIGN.md §6): an instance, a registry name ("jnp", "pallas", ...),
+    or None for the process default. It is resolved once here so every
+    solve the engine/server funnels through this task hits the same
+    compiled executable.
     """
 
     name = "linear-system"
@@ -53,11 +60,13 @@ class LinearSystemTask:
 
     def __init__(self, systems: Sequence[LinearSystem] = (),
                  action_space: Optional[ActionSpace] = None,
-                 bucket_step: int = 128, min_bucket: int = 128):
+                 bucket_step: int = 128, min_bucket: int = 128,
+                 backend=None):
         self.instances: List[LinearSystem] = list(systems)
         self.action_space = action_space
         self.bucket_step = bucket_step
         self.min_bucket = min_bucket
+        self.backend = resolve_backend(backend)
         self._features: Optional[np.ndarray] = None
         self._kappas: Optional[np.ndarray] = None
 

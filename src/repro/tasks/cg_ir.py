@@ -26,15 +26,18 @@ class CGIRTask(LinearSystemTask):
     def __init__(self, systems: Sequence[LinearSystem] = (),
                  action_space: Optional[ActionSpace] = None,
                  cg_cfg: CGConfig = CGConfig(),
-                 bucket_step: int = 128, min_bucket: int = 128):
-        super().__init__(systems, action_space, bucket_step, min_bucket)
+                 bucket_step: int = 128, min_bucket: int = 128,
+                 backend=None):
+        super().__init__(systems, action_space, bucket_step, min_bucket,
+                         backend=backend)
         self.cg_cfg = cg_cfg
 
     def solve_rows(self, rows, action_rows: Sequence[np.ndarray],
                    chunk: int) -> List[Outcome]:
         A, b, x, acts, k = stack_fixed(rows, action_rows, chunk)
         stats = cg_ir_batch(jnp.asarray(A), jnp.asarray(b), jnp.asarray(x),
-                            jnp.asarray(acts, jnp.int32), self.cg_cfg)
+                            jnp.asarray(acts, jnp.int32), self.cg_cfg,
+                            backend=self.backend)
         ferr = np.asarray(stats.ferr)
         nbe = np.asarray(stats.nbe)
         n_outer = np.asarray(stats.n_outer)

@@ -35,13 +35,15 @@ class GMRESIRTask(LinearSystemTask):
     def __init__(self, systems: Sequence[LinearSystem] = (),
                  action_space: Optional[ActionSpace] = None,
                  ir_cfg: IRConfig = IRConfig(),
-                 bucket_step: int = 128, min_bucket: int = 128):
-        super().__init__(systems, action_space, bucket_step, min_bucket)
+                 bucket_step: int = 128, min_bucket: int = 128,
+                 backend=None):
+        super().__init__(systems, action_space, bucket_step, min_bucket,
+                         backend=backend)
         self.ir_cfg = ir_cfg
 
     def solve_rows(self, rows, action_rows: Sequence[np.ndarray],
                    chunk: int) -> List[Outcome]:
         recs = solve_fixed_batch([r[0] for r in rows], [r[1] for r in rows],
                                  [r[2] for r in rows], action_rows,
-                                 self.ir_cfg, chunk)
+                                 self.ir_cfg, chunk, backend=self.backend)
         return [outcome_of_record(r) for r in recs]

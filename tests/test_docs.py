@@ -1,0 +1,152 @@
+"""Docs integrity gate (run by the CI docs job).
+
+Fails on:
+  * broken intra-repo markdown links (``[text](relative/path)``),
+  * source citations of markdown files that do not exist in the repo,
+  * ``DESIGN.md §x.y`` citations whose section is missing from
+    docs/DESIGN.md.
+
+Pure-stdlib static checks — no jax import, safe to run anywhere.
+"""
+import os
+import re
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SOURCE_DIRS = ("src", "tests", "benchmarks", "examples", "docs")
+SKIP_DIRS = {".git", "__pycache__", ".ruff_cache", "results", "artifacts",
+             ".github", ".claude"}
+
+# Markdown files whose names may legitimately appear in prose without
+# existing in-repo (e.g. generic mentions inside strings).
+ALLOWED_MISSING = set()
+
+
+def _walk(exts):
+    # Repo root: top-level files only (no recursion — a stray .venv or
+    # node_modules must not feed the gate).
+    for f in sorted(os.listdir(REPO)):
+        path = os.path.join(REPO, f)
+        if os.path.isfile(path) and f.endswith(exts):
+            yield path
+    for d in SOURCE_DIRS:
+        base = os.path.join(REPO, d)
+        if not os.path.isdir(base):
+            continue
+        for root, dirs, files in os.walk(base):
+            dirs[:] = [x for x in dirs if x not in SKIP_DIRS]
+            for f in files:
+                if f.endswith(exts):
+                    yield os.path.join(root, f)
+
+
+def _md_files():
+    top = [os.path.join(REPO, f) for f in os.listdir(REPO)
+           if f.endswith(".md")]
+    docs = [os.path.join(r, f)
+            for r, ds, fs in os.walk(os.path.join(REPO, "docs"))
+            for f in fs if f.endswith(".md")]
+    return top + docs
+
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def test_markdown_relative_links_resolve():
+    broken = []
+    for path in _md_files():
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            target_path = target.split("#", 1)[0]
+            if not target_path:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), target_path))
+            if not os.path.exists(resolved):
+                broken.append(f"{os.path.relpath(path, REPO)} -> {target}")
+    assert not broken, "broken intra-repo markdown links:\n" + "\n".join(broken)
+
+
+# Citations of markdown files from source: "DESIGN.md", "PAPER_MAP.md", ...
+_MD_CITE = re.compile(r"\b([A-Za-z][A-Za-z0-9_]*\.md)\b")
+
+
+def _repo_md_basenames():
+    names = {}
+    for path in _md_files():
+        names.setdefault(os.path.basename(path), path)
+    return names
+
+
+def test_source_md_citations_exist():
+    known = _repo_md_basenames()
+    missing = []
+    for path in _walk((".py",)):
+        rel = os.path.relpath(path, REPO)
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        for name in set(_MD_CITE.findall(text)):
+            if name in ALLOWED_MISSING:
+                continue
+            if name not in known:
+                missing.append(f"{rel} cites {name}")
+    assert not missing, ("source cites non-existent markdown files:\n"
+                         + "\n".join(sorted(set(missing))))
+
+
+# "DESIGN.md §3.4", "DESIGN §3", "(DESIGN §4)" — all normalize to a
+# section number that must exist as a DESIGN.md heading.
+_DESIGN_CITE = re.compile(r"DESIGN(?:\.md)?\s*§\s*([0-9]+(?:\.[0-9]+)*)")
+_HEADING = re.compile(r"^#{1,6}\s+([0-9]+(?:\.[0-9]+)*)\b", re.MULTILINE)
+
+
+def _design_sections():
+    path = os.path.join(REPO, "docs", "DESIGN.md")
+    assert os.path.exists(path), "docs/DESIGN.md is missing"
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    sections = set(_HEADING.findall(text))
+    # §3.4 implies §3 exists as a chapter even if only subsections are
+    # numbered; keep the check strict the other way round only.
+    return sections
+
+
+def test_design_section_citations_resolve():
+    sections = _design_sections()
+    unresolved = []
+    for path in _walk((".py", ".md")):
+        rel = os.path.relpath(path, REPO)
+        if rel == os.path.join("docs", "DESIGN.md"):
+            continue
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        for sec in _DESIGN_CITE.findall(text):
+            if sec not in sections:
+                unresolved.append(f"{rel} cites DESIGN.md §{sec}")
+    assert not unresolved, ("DESIGN.md citations of missing sections:\n"
+                            + "\n".join(sorted(set(unresolved))))
+
+
+def test_design_covers_advertised_sections():
+    """The sections the issue/code contract names must stay present."""
+    sections = _design_sections()
+    for sec in ("3.3", "3.4", "3.5", "4", "5", "6", "6.2", "6.3"):
+        assert sec in sections, f"DESIGN.md lost §{sec}"
+
+
+def test_paper_map_module_paths_exist():
+    path = os.path.join(REPO, "docs", "PAPER_MAP.md")
+    assert os.path.exists(path), "docs/PAPER_MAP.md is missing"
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    missing = []
+    for ref in re.findall(r"`((?:src|tests|benchmarks|examples)/[^`]*)`",
+                          text):
+        target = ref.split("::", 1)[0]
+        if not os.path.exists(os.path.join(REPO, target)):
+            missing.append(ref)
+    assert not missing, ("PAPER_MAP.md references missing paths:\n"
+                         + "\n".join(missing))
