@@ -6,7 +6,11 @@ precision backend (DESIGN.md §6), measures
   * solves/s through the `AutotuneEngine` (exhaustive instance x action
     sweep — every solve runs the full batched solver on that backend), and
   * req/s through the serving stack (`AutotuneServer` submit -> micro-
-    batch -> solve -> reward -> Q-update roundtrip),
+    batch -> solve -> reward -> Q-update roundtrip), and
+  * solves/s of the LU + triangular-substitution pipeline, strict
+    row-loop vs blocked (panel LU + chopped-GEMM trailing update +
+    block-triangular solves, DESIGN.md §6.4), per n and per backend —
+    the `lu_trisolve` section,
 
 so `BENCH_results.json` accumulates the jnp-vs-pallas hot-path
 comparison the backend layer exists for. Off-TPU the pallas backend is
@@ -117,6 +121,56 @@ def bench_serving(task_name: str, backend, tmp_root: str, n_req: int,
             "req_per_s": n_req / max(wall, 1e-9)}
 
 
+def bench_lu_trisolve(pallas_backend, mode: str, full: bool) -> list:
+    """solves/s of jitted lu_factor_auto + lu_solve, strict vs blocked.
+
+    The blocked path (DESIGN.md §6.4) must beat the strict row loop on
+    the jnp backend at n >= 256 — the headline number of the blocked
+    factorization/substitution subsystem. Off-TPU the pallas side runs
+    the *interpreter* (mode-labeled, correctness-priced): it is timed at
+    one size only, for dispatch-overhead visibility, not kernel speed.
+    """
+    from functools import partial
+
+    import jax.numpy as jnp
+
+    from repro.solvers import (STRICT_ONLY, BlockingPolicy, lu_factor_auto,
+                               lu_solve)
+
+    @partial(jax.jit, static_argnames=("backend", "blocking"))
+    def pipeline(A, b, fmt, backend, blocking):
+        f = lu_factor_auto(A, fmt, backend=backend, blocking=blocking)
+        return lu_solve(f.lu, f.perm, b, fmt, backend=backend,
+                        blocking=blocking)
+
+    from repro.precision import FORMAT_ID
+    fmt = jnp.asarray(FORMAT_ID["fp32"], jnp.int32)
+    rng = np.random.default_rng(0)
+    jnp_ns = (128, 256, 512, 1024) if full else (128, 256, 512)
+    pallas_ns = jnp_ns if mode == "compiled-tpu" else (256,)
+    variants = [("strict", STRICT_ONLY), ("blocked", BlockingPolicy(min_n=1))]
+    entries = []
+    for backend, ns, reps in ((resolve_backend("jnp"), jnp_ns, 3),
+                              (pallas_backend, pallas_ns, 2)):
+        label = backend.name if backend.name != "pallas" else mode
+        for n in ns:
+            A = jnp.asarray(rng.standard_normal((n, n)) + np.eye(n) * n,
+                            jnp.float64)
+            b = jnp.asarray(rng.standard_normal(n), jnp.float64)
+            A, b = backend.coerce(A, b)
+            for vname, pol in variants:
+                pipeline(A, b, fmt, backend, pol).block_until_ready()
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    pipeline(A, b, fmt, backend, pol).block_until_ready()
+                wall = (time.perf_counter() - t0) / reps
+                entries.append({"n": n, "variant": vname,
+                                "backend": backend.name, "mode": label,
+                                "wall_s": wall,
+                                "solves_per_s": 1.0 / max(wall, 1e-9)})
+    return entries
+
+
 def run(full: bool = False, recompute: bool = False) -> list:
     scale = {"n_sys": 12 if full else 6, "n_req": 32 if full else 16,
              "n_range": [32, 96] if full else [16, 44]}
@@ -124,9 +178,11 @@ def run(full: bool = False, recompute: bool = False) -> list:
     cached = None if recompute else load_report("precision_backend_bench")
     # A cached report is only valid for the same scale AND the same
     # pallas execution mode: interpret-cpu numbers must not shadow a
-    # compiled-TPU pass once the host gains TPU access.
+    # compiled-TPU pass once the host gains TPU access. Reports from
+    # before the lu_trisolve section exist are also recomputed.
     if (cached is not None and cached.get("scale") == scale
-            and cached.get("pallas_mode") == mode):
+            and cached.get("pallas_mode") == mode
+            and "lu_trisolve" in cached):
         return emit_rows(cached)
     import tempfile
     report = {"pallas_mode": mode, "scale": scale, "entries": []}
@@ -142,6 +198,7 @@ def run(full: bool = False, recompute: bool = False) -> list:
                 report["entries"].append(
                     {"task": task_name, "backend": backend.name,
                      "mode": label, **eng, **srv})
+    report["lu_trisolve"] = bench_lu_trisolve(pallas, mode, full)
     save_report("precision_backend_bench", report)
     return emit_rows(report)
 
@@ -153,6 +210,12 @@ def emit_rows(report: dict) -> list:
         derived = (f"solves_per_s={e['solves_per_s']:.2f};"
                    f"req_per_s={e['req_per_s']:.2f};mode={e['mode']}")
         rows.append(f"backend/{e['task']}/{e['backend']},{us:.0f},{derived}")
+    for e in report.get("lu_trisolve", []):
+        us = 1e6 * e["wall_s"]
+        derived = (f"solves_per_s={e['solves_per_s']:.2f};"
+                   f"mode={e['mode']}")
+        rows.append(f"lu_trisolve/n{e['n']}/{e['variant']}/{e['backend']},"
+                    f"{us:.0f},{derived}")
     return rows
 
 

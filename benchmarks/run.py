@@ -78,6 +78,18 @@ def write_bench_results(path: str = BENCH_RESULTS_PATH) -> dict:
                  "solves_per_s": e["solves_per_s"],
                  "req_per_s": e["req_per_s"]}
                 for e in backend.get("entries", [])]}
+        if backend.get("lu_trisolve"):
+            # Strict row-loop vs blocked LU+trisolve pipeline
+            # (DESIGN.md §6.4), with per-n blocked/strict speedups.
+            entries = backend["lu_trisolve"]
+            strict = {(e["n"], e["backend"]): e["solves_per_s"]
+                      for e in entries if e["variant"] == "strict"}
+            summary["lu_trisolve"] = [
+                dict(e, speedup_vs_strict=(
+                    e["solves_per_s"] / strict[(e["n"], e["backend"])]
+                    if e["variant"] == "blocked"
+                    and strict.get((e["n"], e["backend"])) else None))
+                for e in entries]
     with open(path, "w") as f:
         json.dump(summary, f, indent=1, default=float)
     return summary

@@ -8,7 +8,12 @@ fixed-shape (chunk, n_pad, n_pad) batches — short batches are padded by
 repeating row 0 — and executed with one `gmres_ir_batch` call. Because
 every batch for a given (bucket, chunk) pair has the same shape, XLA
 compiles each bucket exactly once per process, no matter how many
-batches flow through it.
+batches flow through it. That single-executable property extends to
+the blocked factorization/substitution path: `ir_cfg.blocking`
+(DESIGN.md §6.4) is part of the static config, so buckets at or above
+its threshold compile the blocked LU + trisolve variant — once, with
+the format ids still runtime data — and smaller buckets the strict
+row-loop variant, on either precision backend.
 
 `bucket_of` itself lives in the solver-free `core.task` module (the
 engine buckets work without knowing any solver) and is re-exported here
@@ -72,7 +77,9 @@ def solve_fixed_batch(A_rows: Sequence[np.ndarray],
     to exactly `chunk` rows by repeating row 0, keeping the compiled shape
     constant. Returns one SolveRecord per *input* row (pad rows dropped).
     `backend` selects the precision backend (DESIGN.md §6); the solver
-    entry point coerces rows to the backend's carrier dtype.
+    entry point coerces rows to the backend's carrier dtype. Buckets at
+    or above `ir_cfg.blocking.min_n` run the blocked LU + trisolve hot
+    path (DESIGN.md §6.4) inside the same vmapped executable.
     """
     from repro.tasks.base import stack_fixed
     A, b, x, acts, k = stack_fixed(list(zip(A_rows, b_rows, x_rows)),

@@ -1,5 +1,5 @@
-from .ops import make_fmt_params, qmatmul_op, qmv_op
-from .ref import qmatmul_ref, qmatmul_ref_blocked, qmv_ref
+from .ops import make_fmt_params, qgemm_op, qmatmul_op, qmv_op
+from .ref import qgemm_ref, qmatmul_ref, qmatmul_ref_blocked, qmv_ref
 
 __all__ = ["qmatmul_op", "qmatmul_ref", "qmatmul_ref_blocked",
-           "qmv_op", "qmv_ref", "make_fmt_params"]
+           "qgemm_op", "qgemm_ref", "qmv_op", "qmv_ref", "make_fmt_params"]

@@ -51,6 +51,46 @@ def qmv_op(a: jnp.ndarray, v: jnp.ndarray, fmt_id, *,
     return out[:M]
 
 
+# Largest lane-padded K the single-K-block qgemm kernel keeps in VMEM
+# per tile pair; larger reductions fall back to the bit-identical oracle.
+QGEMM_MAX_KP = 512
+
+
+def qgemm_op(a: jnp.ndarray, b: jnp.ndarray, fmt_id, *,
+             chop_out: bool = True, bm: int | None = None,
+             bn: int | None = None,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """Pinned-contract chopped GEMM for (M, K) x (K, N) f32 operands —
+    the `backend.chop_matmul` fast path (DESIGN.md §6.2).
+
+    Pads K to the LANE multiple shared with `ref.qgemm_ref` and runs the
+    qmatmul kernel with a SINGLE K block (`bk = Kp`), so the kernel's
+    per-tile dot performs the same length-Kp reduction as the oracle's
+    full-shape dot; dot reductions are M/N-tile-invariant (measured),
+    which is what makes the two backends bit-identical. Reductions
+    beyond `QGEMM_MAX_KP` route to the oracle (bit-identical by the same
+    contract — a pure VMEM-budget choice).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if a.dtype != jnp.float32 or b.dtype != jnp.float32:
+        raise TypeError("qgemm_op targets the f32 TPU carrier; got "
+                        f"{a.dtype} x {b.dtype}")
+    M, K = a.shape
+    _, N = b.shape
+    Kp = -(-K // LANE) * LANE
+    if Kp > QGEMM_MAX_KP:
+        from .ref import qgemm_ref
+        return qgemm_ref(a, b, fmt_id, chop_out=chop_out)
+    bm = min(bm or DEFAULT_BM, max(8, 1 << int(np.ceil(np.log2(max(M, 1))))))
+    bn = min(bn or DEFAULT_BN, max(128, 1 << int(np.ceil(np.log2(max(N, 1))))))
+    ap = _pad_to(a, bm, Kp)
+    bp = _pad_to(b, Kp, bn)
+    out = qmatmul_pallas(ap, bp, make_fmt_params(fmt_id, chop_out),
+                         bm=bm, bn=bn, bk=Kp, interpret=interpret)
+    return out[:M, :N]
+
+
 def qmatmul_op(a: jnp.ndarray, b: jnp.ndarray, fmt_id, *,
                chop_out: bool = True, bm: int | None = None,
                bn: int | None = None, bk: int | None = None,

@@ -35,6 +35,33 @@ def qmv_ref(a: jnp.ndarray, v: jnp.ndarray, fmt_id,
     return out
 
 
+def qgemm_ref(a: jnp.ndarray, b: jnp.ndarray, fmt_id,
+              chop_out: bool = True,
+              chop_inputs: bool = True) -> jnp.ndarray:
+    """Bit-exact jnp oracle for the pinned-contract chopped GEMM
+    (`ops.qgemm_op` — the `backend.chop_matmul` implementation).
+
+    Contract (DESIGN.md §6.2): K is zero-padded to the LANE multiple and
+    reduced by ONE carrier dot. The dot's per-element reduction over K is
+    invariant to how M and N are tiled (measured on XLA:CPU, including
+    under vmap) but NOT to the reduction length — hence the shared K
+    padding, exactly as in `qmv_ref`. The kernel runs the same dot on
+    (bm, Kp) x (Kp, bn) tiles, so both backends produce identical bits.
+    Works on any float carrier; the pallas kernel itself is f32-only.
+    """
+    K = a.shape[-1]
+    Kp = -(-K // LANE) * LANE
+    ap = jnp.pad(a, ((0, 0), (0, Kp - K)))
+    bp = jnp.pad(b, ((0, Kp - K), (0, 0)))
+    if chop_inputs:
+        ap = chop(ap, fmt_id)
+        bp = chop(bp, fmt_id)
+    out = jnp.dot(ap, bp, preferred_element_type=a.dtype)
+    if chop_out:
+        out = chop(out, fmt_id)
+    return out
+
+
 def qmatmul_ref(a: jnp.ndarray, b: jnp.ndarray, fmt_id,
                 chop_out: bool = True) -> jnp.ndarray:
     a32 = chop(a.astype(jnp.float32), fmt_id)

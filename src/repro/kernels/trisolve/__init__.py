@@ -1,0 +1,4 @@
+from .ops import trisolve_op
+from .ref import trisolve_ref
+
+__all__ = ["trisolve_op", "trisolve_ref"]

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: blocked triangular substitution in emulated precision.
+
+The strict row-loop forward/backward substitutions dominate GMRES-IR/CG-IR
+wall time at small-to-medium n: every row is a kernel-launch-sized piece
+of work with an HBM round trip on the jnp path. This kernel runs the
+*whole* blocked solve — off-diagonal fused chopped-matvec tiles plus the
+strict-row-loop diagonal solves — in one launch with the factor matrix
+VMEM-resident, mirroring how kernels/qmatmul fuses the matvec.
+
+The kernel body is `ref._trisolve_core`, the exact function the jnp
+oracle executes: the two backends are bit-identical by construction, not
+by a shared reduction *shape* (DESIGN.md §6.2). Format parameters live
+in SMEM as runtime data — one compiled kernel serves every precision
+action (DESIGN.md §3.4).
+
+Whole-matrix VMEM residency caps the kernel at moderate n (the ops
+wrapper routes larger systems to the oracle); the paper's Table 2/4
+grids and the serving buckets sit comfortably below the cap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.precision.chop import _chop_core
+
+from .ref import _trisolve_core
+
+# Above this padded size the solve no longer fits VMEM: the kernel
+# holds the (n, n) factor AND its chopped copy (f32: 2 * 1024^2 * 4 B
+# = 8 MiB of the ~16 MiB/core budget, plus rhs/output/loop buffers);
+# ops.trisolve_op falls back to the bit-identical oracle beyond it.
+MAX_N = 1024
+
+
+def _trisolve_kernel(fmt_ref, a_ref, b_ref, o_ref, *, lower: bool,
+                     block: int):
+    """fmt_ref (SMEM): int32[4] = [t, emin, xmax_bits, saturate]."""
+    t = fmt_ref[0]
+    emin = fmt_ref[1]
+    xmax_bits = fmt_ref[2].astype(jnp.uint32)
+    saturate = fmt_ref[3] != 0
+
+    def chop_fn(x):
+        return _chop_core(x, t, emin, 0, xmax_bits, saturate)
+
+    o_ref[...] = _trisolve_core(a_ref[...], b_ref[...], chop_fn,
+                                lower=lower, block=block)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lower", "block", "interpret"))
+def trisolve_pallas(Lu: jnp.ndarray, b2d: jnp.ndarray,
+                    fmt_params: jnp.ndarray, *, lower: bool,
+                    block: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Lu: (n, n) f32 with n % block == 0 (padded by ops.trisolve_op);
+    b2d: (1, n) f32. fmt_params: int32[4]. Returns y as (1, n)."""
+    n = Lu.shape[-1]
+    assert n % block == 0, "pad to a block multiple (ops.trisolve_op)"
+    return pl.pallas_call(
+        functools.partial(_trisolve_kernel, lower=lower, block=block),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((n, n), lambda: (0, 0)),
+            pl.BlockSpec((1, n), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(fmt_params, Lu, b2d)

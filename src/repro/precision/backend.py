@@ -1,16 +1,17 @@
 """Precision backend dispatch: one signature, two implementations
 (DESIGN.md §6).
 
-Every precision action the bandit selects is *applied* by three ops on
+Every precision action the bandit selects is *applied* by four ops on
 the solver hot path: an elementwise round-to-format (`chop`), a fused
-chopped matvec (`chop_mv`), and a fused chopped matmul (`chop_matmul`).
-This module gives those ops a backend-agnostic home:
+chopped matvec (`chop_mv`), a fused chopped matmul (`chop_matmul` — the
+blocked LU trailing update), and a blocked triangular substitution
+(`chop_trisolve`). This module gives those ops a backend-agnostic home:
 
   * ``"jnp"``   — the pure-jnp oracle (`repro.precision.chop`), valid on
     any float carrier (f64 for the paper's host experiments);
   * ``"pallas"``— the Pallas TPU kernels (`kernels/chop`,
-    `kernels/qmatmul`), f32 carrier, VMEM-resident rounding with no
-    extra HBM round trips. Off-TPU, selecting ``"pallas"`` falls back
+    `kernels/qmatmul`, `kernels/trisolve`), f32 carrier, VMEM-resident
+    rounding with no extra HBM round trips. Off-TPU, selecting ``"pallas"`` falls back
     to ``"jnp"`` (the interpreter is a correctness tool, not a fast
     path); ``"pallas-interpret"`` forces the kernels through the Pallas
     interpreter for CPU bit-exactness testing.
@@ -23,9 +24,12 @@ switching backends costs exactly one extra executable.
 
 Bit-exactness contract (DESIGN.md §6.2): for a shared f32 carrier, both
 backends produce bit-identical results for `chop` (same integer RNE
-algorithm elementwise) and `chop_mv` (shared lane-padded row-sum
-reduction shape). `chop_matmul` agrees within f32 accumulation-order
-noise only (MXU tile order is not reproduced by a plain `jnp.dot`).
+algorithm elementwise), `chop_mv` (shared lane-padded row-sum reduction
+shape), `chop_matmul` (shared lane-padded K and a single-K-block dot,
+whose reduction is M/N-tile-invariant — measured), and `chop_trisolve`
+(the kernel body and the oracle are the same `_trisolve_core`
+function). The multi-K-tile MXU schedule lives on as
+`kernels/qmatmul.qmatmul_op` outside the backend contract.
 
 Selection order: explicit argument > `set_default_backend` >
 ``REPRO_PRECISION_BACKEND`` env var > ``"jnp"``.
@@ -72,6 +76,13 @@ class PrecisionBackend:
                     chop_output: bool = True) -> jnp.ndarray:
         raise NotImplementedError
 
+    def chop_trisolve(self, Lu: jnp.ndarray, b: jnp.ndarray, fmt_id, *,
+                      lower: bool, block: int = 128) -> jnp.ndarray:
+        """Blocked triangular substitution on the combined LU matrix
+        (strictly-lower + unit diagonal when `lower`, upper triangle
+        including the diagonal otherwise) — DESIGN.md §6.2/§6.4."""
+        raise NotImplementedError
+
     def coerce(self, *arrays: jnp.ndarray):
         """Cast float arrays to this backend's carrier dtype (no-op when
         `carrier_dtype` is None)."""
@@ -105,8 +116,16 @@ class JnpBackend(PrecisionBackend):
 
     def chop_matmul(self, a, b, fmt_id, *, chop_inputs: bool = True,
                     chop_output: bool = True):
-        return _chop.chop_matmul(a, b, fmt_id, chop_inputs=chop_inputs,
-                                 chop_output=chop_output)
+        # Pinned tiled-reduction contract shared with the pallas kernel:
+        # lane-padded K, single carrier dot (DESIGN.md §6.2).
+        from repro.kernels.qmatmul.ref import qgemm_ref
+        return qgemm_ref(a, b, fmt_id, chop_out=chop_output,
+                         chop_inputs=chop_inputs)
+
+    def chop_trisolve(self, Lu, b, fmt_id, *, lower: bool,
+                      block: int = 128):
+        from repro.kernels.trisolve.ref import trisolve_ref
+        return trisolve_ref(Lu, b, fmt_id, lower=lower, block=block)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,14 +157,33 @@ class PallasBackend(PrecisionBackend):
 
     def chop_matmul(self, a, b, fmt_id, *, chop_inputs: bool = True,
                     chop_output: bool = True):
-        if not chop_inputs:
-            # The fused kernel always rounds its operands in VMEM; the
-            # unfused variant exists only for pre-chopped jnp callers.
-            return _chop.chop_matmul(a, b, fmt_id, chop_inputs=False,
-                                     chop_output=chop_output)
-        from repro.kernels.qmatmul import qmatmul_op
-        return qmatmul_op(a, b, fmt_id, chop_out=chop_output,
-                          interpret=self.interpret)
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        if (not chop_inputs or a.dtype != jnp.float32
+                or b.dtype != jnp.float32):
+            # The fused kernel always rounds its operands in VMEM and is
+            # f32-only; the oracle shares the pinned reduction contract,
+            # so routing there is bit-transparent (DESIGN.md §6.2).
+            from repro.kernels.qmatmul.ref import qgemm_ref
+            return qgemm_ref(a, b, fmt_id, chop_out=chop_output,
+                             chop_inputs=chop_inputs)
+        from repro.kernels.qmatmul import qgemm_op
+        return qgemm_op(a, b, fmt_id, chop_out=chop_output,
+                        interpret=self.interpret)
+
+    def chop_trisolve(self, Lu, b, fmt_id, *, lower: bool,
+                      block: int = 128):
+        Lu = jnp.asarray(Lu)
+        b = jnp.asarray(b)
+        if Lu.dtype != jnp.float32 or b.dtype != jnp.float32:
+            # Non-f32 carriers only occur outside the coerced solver
+            # entry points; the oracle IS the kernel body, so this
+            # routing is bit-transparent (DESIGN.md §6.2).
+            from repro.kernels.trisolve.ref import trisolve_ref
+            return trisolve_ref(Lu, b, fmt_id, lower=lower, block=block)
+        from repro.kernels.trisolve import trisolve_op
+        return trisolve_op(Lu, b, fmt_id, lower=lower, block=block,
+                           interpret=self.interpret)
 
 
 # ---------------------------------------------------------------------------

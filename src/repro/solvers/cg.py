@@ -35,9 +35,10 @@ from jax import lax
 
 from repro.precision import resolve_backend, rounding_unit
 
+from .blocking import DEFAULT_BLOCKING, BlockingPolicy, resolve_blocking
 from .gmres import chop_mv
 from .ir import CONVERGED, FAILED, MAXITER, STAGNATED
-from .lu import lu_factor
+from .lu import lu_factor_auto
 from .triangular import lu_solve
 
 
@@ -48,6 +49,8 @@ class CGConfig:
     m_max: int = 50            # max inner CG iterations
     tol_inner: float = 1e-4    # CG relative residual tolerance
     stag_tol: float = 0.9      # stagnation threshold on ||z_i||/||z_{i-1}||
+    # Blocked LU/trisolve engagement (DESIGN.md §6.4), static jit key.
+    blocking: BlockingPolicy = DEFAULT_BLOCKING
 
 
 class CGStats(NamedTuple):
@@ -76,13 +79,14 @@ def _dot(a, b, fmt_id, chop):
 
 def pcg(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
         r: jnp.ndarray, fmt_g, *, m_max: int, tol: float,
-        backend=None) -> PCGResult:
+        backend=None, blocking=None) -> PCGResult:
     """LU-preconditioned CG on A z = r, entirely in precision u_g.
 
     A_g: the system matrix pre-chopped to u_g; LU/perm: chopped factors
     of A in u_f, used as the (fixed) preconditioner.
     """
     bk = resolve_backend(backend)
+    pol = resolve_blocking(blocking)
     A_g, LU, r = bk.coerce(jnp.asarray(A_g), jnp.asarray(LU),
                            jnp.asarray(r))
     chop = bk.chop
@@ -90,7 +94,7 @@ def pcg(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
     r0 = chop(r, fmt_g)
     beta0 = jnp.linalg.norm(r0)
     ok0 = jnp.isfinite(beta0) & (beta0 > 0)
-    y0 = lu_solve(LU, perm, r0, fmt_g, backend=bk)
+    y0 = lu_solve(LU, perm, r0, fmt_g, backend=bk, blocking=pol)
     rho0 = _dot(r0, y0, fmt_g, chop)
     z0 = jnp.zeros_like(r0)
 
@@ -110,7 +114,7 @@ def pcg(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
         z_new = chop(z + chop(alpha * p, fmt_g), fmt_g)
         rin_new = chop(rin - chop(alpha * q, fmt_g), fmt_g)
         res = jnp.linalg.norm(rin_new)
-        y = lu_solve(LU, perm, rin_new, fmt_g, backend=bk)
+        y = lu_solve(LU, perm, rin_new, fmt_g, backend=bk, blocking=pol)
         rho_new = _dot(rin_new, y, fmt_g, chop)
         rho_safe = jnp.where(rho == 0, jnp.ones((), dtype), rho)
         beta = chop(rho_new / rho_safe, fmt_g)
@@ -136,7 +140,7 @@ def _cg_ir_impl(A, b, x_true, action, cfg, backend) -> CGStats:
     chop = backend.chop
     uf, u, ug, ur = action[0], action[1], action[2], action[3]
 
-    lu = lu_factor(A, uf, backend=backend)
+    lu = lu_factor_auto(A, uf, backend=backend, blocking=cfg.blocking)
     A_g = chop(A, ug)
     A_r = chop(A, ur)
     b_r = chop(b, ur)
@@ -152,8 +156,9 @@ def _cg_ir_impl(A, b, x_true, action, cfg, backend) -> CGStats:
     def body(state):
         x, znorm_prev, i, n_cg, status, done = state
         r = chop(b_r - chop_mv(A_r, x, ur, backend=backend), ur)
-        cg = pcg(A_g, lu.lu, lu.perm, r, ug,
-                 m_max=cfg.m_max, tol=cfg.tol_inner, backend=backend)
+        cg = pcg(A_g, lu.lu, lu.perm, r, ug, m_max=cfg.m_max,
+                 tol=cfg.tol_inner, backend=backend,
+                 blocking=cfg.blocking)
         z = chop(cg.z, u)
         x_new = chop(x + z, u)
         znorm = _inf_norm(z)

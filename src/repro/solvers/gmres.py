@@ -27,6 +27,7 @@ from jax import lax
 
 from repro.precision import resolve_backend
 
+from .blocking import resolve_blocking
 from .triangular import solve_unit_lower, solve_upper
 
 
@@ -49,16 +50,22 @@ def chop_mv(A: jnp.ndarray, v: jnp.ndarray, fmt_id,
     return bk.chop_mv(A, v, fmt_id)
 
 
-def _precond(LU, perm, v, fmt_id, backend):
-    y = solve_unit_lower(LU, v[perm], fmt_id, backend=backend)
-    return solve_upper(LU, y, fmt_id, backend=backend)
+def _precond(LU, perm, v, fmt_id, backend, blocking=None):
+    # Preconditioner application M^{-1} v: the two triangular solves
+    # take the blocked `chop_trisolve` path above the size threshold
+    # (DESIGN.md §6.4) — this pair dominates GMRES-IR wall time.
+    y = solve_unit_lower(LU, v[perm], fmt_id, backend=backend,
+                         blocking=blocking)
+    return solve_upper(LU, y, fmt_id, backend=backend, blocking=blocking)
 
 
 def gmres_precond(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
                   r: jnp.ndarray, fmt_g, *, m_max: int,
-                  tol: float, backend=None) -> GMRESResult:
+                  tol: float, backend=None,
+                  blocking=None) -> GMRESResult:
     """A_g: the system matrix pre-chopped to u_g. r: outer residual."""
     bk = resolve_backend(backend)
+    pol = resolve_blocking(blocking)
     A_g, LU, r = bk.coerce(jnp.asarray(A_g), jnp.asarray(LU),
                            jnp.asarray(r))
     chop = bk.chop
@@ -67,9 +74,10 @@ def gmres_precond(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
     zero = jnp.zeros((), dtype)
 
     def apply_op(v):
-        return _precond(LU, perm, bk.chop_mv(A_g, v, fmt_g), fmt_g, bk)
+        return _precond(LU, perm, bk.chop_mv(A_g, v, fmt_g), fmt_g, bk,
+                        pol)
 
-    rhat = _precond(LU, perm, chop(r, fmt_g), fmt_g, bk)
+    rhat = _precond(LU, perm, chop(r, fmt_g), fmt_g, bk, pol)
     beta = jnp.linalg.norm(rhat)
     ok0 = jnp.isfinite(beta) & (beta > 0)
     beta_safe = jnp.where(ok0, beta, jnp.ones((), dtype))

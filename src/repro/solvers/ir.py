@@ -34,8 +34,9 @@ from jax import lax
 
 from repro.precision import resolve_backend, rounding_unit
 
+from .blocking import DEFAULT_BLOCKING, BlockingPolicy
 from .gmres import chop_mv, gmres_precond
-from .lu import lu_factor
+from .lu import lu_factor_auto
 from .triangular import lu_solve
 
 
@@ -47,6 +48,9 @@ class IRConfig:
     tol_inner: float = 1e-4    # GMRES relative residual tolerance
     stag_tol: float = 0.9      # Eq. 15 stagnation threshold
     init: str = "zero"         # "zero" (paper accounting) | "lu" (Alg.2 l.2)
+    # Blocked LU/trisolve engagement (DESIGN.md §6.4). Part of the
+    # frozen config so it rides in the static jit key with the rest.
+    blocking: BlockingPolicy = DEFAULT_BLOCKING
 
 
 # Solver outcome status codes.
@@ -71,13 +75,14 @@ def _gmres_ir_impl(A, b, x_true, action, cfg, backend) -> SolveStats:
     chop = backend.chop
     uf, u, ug, ur = action[0], action[1], action[2], action[3]
 
-    lu = lu_factor(A, uf, backend=backend)
+    lu = lu_factor_auto(A, uf, backend=backend, blocking=cfg.blocking)
     A_g = chop(A, ug)
     A_r = chop(A, ur)
     b_r = chop(b, ur)
 
     if cfg.init == "lu":
-        x0 = lu_solve(lu.lu, lu.perm, b, uf, backend=backend)
+        x0 = lu_solve(lu.lu, lu.perm, b, uf, backend=backend,
+                      blocking=cfg.blocking)
         x0 = jnp.where(jnp.isfinite(x0), x0, jnp.zeros_like(x0))
     else:
         x0 = jnp.zeros_like(b)
@@ -94,7 +99,7 @@ def _gmres_ir_impl(A, b, x_true, action, cfg, backend) -> SolveStats:
         r = chop(b_r - chop_mv(A_r, x, ur, backend=backend), ur)
         gm = gmres_precond(A_g, lu.lu, lu.perm, r, ug,
                            m_max=cfg.m_max, tol=cfg.tol_inner,
-                           backend=backend)
+                           backend=backend, blocking=cfg.blocking)
         z = chop(gm.z, u)
         x_new = chop(x + z, u)
         znorm = _inf_norm(z)

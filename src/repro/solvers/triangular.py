@@ -1,11 +1,30 @@
 """Chopped triangular solves (forward/backward substitution).
 
-Per-row semantics: products rounded to the target format, row-dot
-accumulated in the carrier, one rounding on the subtraction and one on the
-division — FMA-style op-level emulation (DESIGN.md §3.5). Roundings
-dispatch through the precision backend (DESIGN.md §6); the per-row
-vectors are small, so every backend routes them to the bit-identical
-jnp chop and the two backends stay exact here by construction.
+Strict path (below the blocking threshold) — per-row semantics: products
+rounded to the target format, row-dot accumulated in the carrier, one
+rounding on the subtraction and one on the division — FMA-style
+op-level emulation (DESIGN.md §3.5). Roundings dispatch through the
+precision backend (DESIGN.md §6); the per-row vectors are small, so
+every backend routes them to the bit-identical jnp chop and the two
+backends stay exact here by construction.
+
+Division rounding is deliberately *double*: `solve_upper` computes
+``chop(chop(y[i] - s) / safe)`` — the subtraction result is a stored
+value (one rounding), and the division result is another stored value
+(a second rounding). This is the op-level model's "one rounding per
+stored operation" applied literally (DESIGN.md §3.5), matching how a
+hardware FMA pipeline would materialize the numerator before a separate
+divide; it is NOT a bug, and ``tests/test_blocked_lu_trisolve.py``
+pins it so backends (and future refactors) cannot drift to the
+single-rounding ``chop((y[i] - s) / safe)`` semantics.
+
+Blocked path (at/above `blocking.min_n`): the whole solve dispatches to
+`backend.chop_trisolve` — block-triangular substitution with fused
+chopped-matvec off-diagonal tiles and strict-row-loop diagonal blocks
+(kernels/trisolve; DESIGN.md §6.2/§6.4). One Pallas launch replaces the
+O(n) sequential row loop on the pallas backend; the jnp backend runs
+the bit-identical oracle. The branch is on the static shape, so each
+size bucket keeps exactly one executable with the format id runtime.
 """
 from __future__ import annotations
 
@@ -14,12 +33,19 @@ from jax import lax
 
 from repro.precision import resolve_backend
 
+from .blocking import resolve_blocking
+
 
 def solve_unit_lower(LU: jnp.ndarray, b: jnp.ndarray, fmt_id,
-                     backend=None) -> jnp.ndarray:
+                     backend=None, blocking=None) -> jnp.ndarray:
     """Solve L y = b where L is unit-lower (strict lower triangle of LU)."""
-    chop = resolve_backend(backend).chop
+    bk = resolve_backend(backend)
     n = LU.shape[-1]
+    pol = resolve_blocking(blocking)
+    if pol.use_blocked(n):
+        return bk.chop_trisolve(LU, b, fmt_id, lower=True,
+                                block=pol.trisolve_block)
+    chop = bk.chop
     idx = jnp.arange(n)
     b = chop(b, fmt_id)
 
@@ -34,10 +60,15 @@ def solve_unit_lower(LU: jnp.ndarray, b: jnp.ndarray, fmt_id,
 
 
 def solve_upper(LU: jnp.ndarray, y: jnp.ndarray, fmt_id,
-                backend=None) -> jnp.ndarray:
+                backend=None, blocking=None) -> jnp.ndarray:
     """Solve U x = y where U is the upper triangle (incl. diagonal) of LU."""
-    chop = resolve_backend(backend).chop
+    bk = resolve_backend(backend)
     n = LU.shape[-1]
+    pol = resolve_blocking(blocking)
+    if pol.use_blocked(n):
+        return bk.chop_trisolve(LU, y, fmt_id, lower=False,
+                                block=pol.trisolve_block)
+    chop = bk.chop
     idx = jnp.arange(n)
     y = chop(y, fmt_id)
 
@@ -48,6 +79,8 @@ def solve_upper(LU: jnp.ndarray, y: jnp.ndarray, fmt_id,
         s = jnp.sum(jnp.where(idx > i, prods, jnp.zeros((), y.dtype)))
         diag = row[i]
         safe = jnp.where(diag == 0, jnp.ones((), y.dtype), diag)
+        # Double rounding by design: stored numerator, then stored
+        # quotient (see module docstring).
         xi = chop(chop(y[i] - s, fmt_id) / safe, fmt_id)
         return x.at[i].set(xi)
 
@@ -55,9 +88,10 @@ def solve_upper(LU: jnp.ndarray, y: jnp.ndarray, fmt_id,
 
 
 def lu_solve(LU: jnp.ndarray, perm: jnp.ndarray, b: jnp.ndarray,
-             fmt_id, backend=None) -> jnp.ndarray:
+             fmt_id, backend=None, blocking=None) -> jnp.ndarray:
     """Solve A x = b given chopped LU factors: x = U \\ (L \\ (P b))."""
     bk = resolve_backend(backend)
+    pol = resolve_blocking(blocking)
     pb = b[perm]
-    y = solve_unit_lower(LU, pb, fmt_id, backend=bk)
-    return solve_upper(LU, y, fmt_id, backend=bk)
+    y = solve_unit_lower(LU, pb, fmt_id, backend=bk, blocking=pol)
+    return solve_upper(LU, y, fmt_id, backend=bk, blocking=pol)

@@ -4,6 +4,11 @@ Same bandit, same engine, same server as GMRES-IR; only the batched
 solver and the work metric differ. Intended for SPD systems (the
 `data.matrices.sparse_spd` generator); on indefinite matrices the CG
 recurrence breaks down and the reward's failure path takes over.
+
+As with GMRES-IR, `cg_cfg.blocking` (DESIGN.md §6.4) size-dispatches
+the LU preconditioner construction and its per-iteration triangular
+applications onto the blocked hot path for buckets at or above the
+threshold.
 """
 from __future__ import annotations
 

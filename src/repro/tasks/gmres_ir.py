@@ -4,6 +4,13 @@ A thin adapter over the existing `core.batching` fixed-shape layer:
 `solve_rows` funnels through `solve_fixed_batch` (one compiled
 `gmres_ir_batch` executable per size bucket) and lifts each
 `SolveRecord` into the solver-agnostic `Outcome`.
+
+The factorization/substitution hot path is size-dispatched by
+`ir_cfg.blocking` (DESIGN.md §6.4): buckets at or above its threshold
+(256 by default) factor with blocked LU and solve with the blocked
+trisolve kernel on whichever precision backend the task was built
+with — no task- or engine-level code is involved, the policy rides the
+frozen config into the jit key.
 """
 from __future__ import annotations
 
