@@ -60,13 +60,15 @@ def make_datasets(kind: str, scale: Scale):
 
 
 def run_setting(train_systems, test_systems, tau: float, weights: dict,
-                scale: Scale, envs=None):
+                scale: Scale, envs=None, space=None):
     """Train policies for each weight setting on a shared env; evaluate all
     on a shared test env + the FP64 fixed-action baseline.
 
     weights: {name: RewardConfig}. Returns (report dict, envs) where envs
-    can be passed back in to reuse solve caches across calls (ablation)."""
-    space = reduced_action_space()
+    can be passed back in to reuse solve caches across calls (ablation).
+    `space` defaults to the paper's reduced space; the fp8 grid passes
+    the `SOLVER_LADDER_FP8`-derived space instead."""
+    space = space if space is not None else reduced_action_space()
     if envs is None:
         env_train = GMRESIREnv(train_systems, space, IRConfig(tau=tau))
         env_test = GMRESIREnv(test_systems, space, IRConfig(tau=tau))

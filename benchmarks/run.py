@@ -2,11 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Sections:
   table2  — dense randsvd (paper Table 2 + Fig. 2 usage distribution)
+  table2fp8 — the dense grid re-run with the fp8-extended action space
+            (SOLVER_LADDER_FP8; reduced scale, honestly recorded)
   table6  — penalty ablation (paper Table 6 + Fig. 4); shares solve caches
             with table2 via the env registry
   table4  — sparse SPD (paper Tables 3/4/5)
   tasks   — per-TunableTask training throughput (GMRES-IR vs CG-IR
             through the shared AutotuneEngine)
+  sharded — SolveExecutor scaling: solves/s vs data-axis width on a
+            forced 8-device host mesh (DESIGN.md §7; subprocess)
   backend — precision-backend comparison: jnp oracle vs pallas kernels,
             solves/s + req/s per task (DESIGN.md §6)
   service — online autotuning service: req/s + latency vs micro-batch size
@@ -15,7 +19,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
 
 After the selected sections run, a top-level ``BENCH_results.json`` is
 written with the headline perf numbers (req/s + p50/p99 from the service
-bench, solves/s per task) so the trajectory accumulates across PRs.
+bench, solves/s per task) plus execution metadata (`jax.device_count()`,
+mesh shape of the sharded sweep) so the trajectory accumulates across
+PRs.
 
 Flags: --full (paper-scale §5.1), --only <name>, --skip-solver.
 """
@@ -51,7 +57,9 @@ def write_bench_results(path: str = BENCH_RESULTS_PATH) -> dict:
     """Aggregate headline numbers from the per-section reports into one
     top-level JSON (req/s, p50/p99, solves/s per task)."""
     from benchmarks.common import load_report
-    summary = {"service": None, "tasks": {}}
+    summary = {"service": None, "tasks": {},
+               "metadata": {"jax_device_count": jax.device_count(),
+                            "jax_backend": jax.default_backend()}}
     service = load_report("service_bench")
     if service:
         summary["service"] = [
@@ -90,6 +98,34 @@ def write_bench_results(path: str = BENCH_RESULTS_PATH) -> dict:
                     if e["variant"] == "blocked"
                     and strict.get((e["n"], e["backend"])) else None))
                 for e in entries]
+    sharded = load_report("task_bench_sharded")
+    if sharded:
+        # Honest labeling: host devices share one CPU — the sweep shows
+        # partition/dispatch overhead vs data width, not HW speedup.
+        summary["task_bench_sharded"] = {
+            "label": sharded["label"], "note": sharded["note"],
+            "device_count": sharded["device_count"],
+            "n": sharded["n"], "chunk": sharded["chunk"],
+            "local_solves_per_s": sharded["local_solves_per_s"],
+            "entries": [{"data": e["data"], "mesh_shape": e["mesh_shape"],
+                         "solves_per_s": e["solves_per_s"],
+                         "speedup_vs_local": e["speedup_vs_local"]}
+                        for e in sharded["entries"]]}
+        summary["metadata"]["sharded_mesh"] = \
+            sharded["entries"][-1]["mesh_shape"]
+        summary["metadata"]["sharded_device_count"] = \
+            sharded["device_count"]
+    fp8 = load_report("table2_fp8")
+    if fp8:
+        w1 = fp8.get("settings", {}).get("W1", {})
+        summary["table2_fp8"] = {
+            "ladder": fp8.get("ladder"),
+            "n_actions": fp8.get("n_actions"),
+            "scale": fp8.get("scale"),
+            "usage_per_solve": w1.get("usage_per_solve"),
+            "usage_per_range": w1.get("usage_per_range"),
+            "table": w1.get("table"),
+            "fp64_baseline": fp8.get("fp64_baseline", {}).get("table")}
     with open(path, "w") as f:
         json.dump(summary, f, indent=1, default=float)
     return summary
@@ -125,6 +161,14 @@ def main() -> None:
     if want("tasks"):
         from benchmarks import task_bench
         rows += task_bench.run(full=full)
+        _flush(rows)
+    if want("table2fp8"):
+        from benchmarks import table2_dense
+        rows += table2_dense.run_fp8(full=full)
+        _flush(rows)
+    if want("sharded"):
+        from benchmarks import task_bench
+        rows += task_bench.run_sharded(full=full)
         _flush(rows)
     if want("backend"):
         from benchmarks import precision_backend_bench

@@ -3,11 +3,18 @@ baseline, metrics per condition range. Also emits Figure 2's per-range
 precision-usage distribution (the same evaluation pass produces both)."""
 from __future__ import annotations
 
+import os
+import sys
+
+if __package__ in (None, ""):      # script entry: repo root onto sys.path
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+        __file__))))
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from benchmarks.common import (W1, W2, emit_csv_rows, get_scale,
+from benchmarks.common import (Scale, W1, W2, emit_csv_rows, get_scale,
                                make_datasets, run_setting, save_report)
 
 
@@ -37,7 +44,44 @@ def run(full: bool = False, taus=(1e-6, 1e-8), env_registry=None,
     return rows
 
 
+def run_fp8(full: bool = False, recompute: bool = False, tau: float = 1e-6,
+            subsample: int = 48):
+    """The Table 2 dense grid re-run with the fp8-extended action space
+    (`SOLVER_LADDER_FP8`: e5m2/e4m3 prepended — saturating overflow
+    makes fp8 factorization a viable arm on well-conditioned systems).
+
+    Scale is reduced relative to the paper grid (W1 only, fewer systems,
+    pruned to `subsample` of the 126 monotone arms — the paper itself
+    prunes to ~1/4) so the fp8 sweep stays CPU-host-sized; the report
+    carries the exact scale so `BENCH_results.json` is honest about it.
+    """
+    from benchmarks.common import load_report
+    from repro.core import fp8_reduced_action_space
+    cached = None if recompute else load_report("table2_fp8")
+    if cached is None:
+        scale = Scale(n_train=24, n_test=24, episodes=30,
+                      n_range=(100, 250)) if not full else get_scale(True)
+        space = fp8_reduced_action_space(subsample=subsample)
+        train, test = make_datasets("dense", scale)
+        report, _ = run_setting(train, test, tau, {"W1": W1}, scale,
+                                space=space)
+        report["ladder"] = list(space.ladder)
+        report["n_actions"] = int(space.n_actions)
+        report["scale"] = {"n_train": scale.n_train, "n_test": scale.n_test,
+                           "episodes": scale.episodes,
+                           "n_range": list(scale.n_range),
+                           "subsample": subsample, "weights": ["W1"]}
+        save_report("table2_fp8", report)
+        cached = report
+    return emit_csv_rows("table2_fp8", cached)
+
+
 if __name__ == "__main__":
     import sys
-    for r in run(full="--full" in sys.argv):
-        print(r)
+    if "--fp8" in sys.argv:
+        for r in run_fp8(full="--full" in sys.argv,
+                         recompute="--recompute" in sys.argv):
+            print(r)
+    else:
+        for r in run(full="--full" in sys.argv):
+            print(r)

@@ -105,7 +105,106 @@ def emit_rows(report: dict) -> list:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Sharded section: solves/s vs data-axis width on a forced host-device
+# mesh (DESIGN.md §7). Device count is fixed at jax import, so the sweep
+# runs in a subprocess with XLA_FLAGS forcing 8 host devices. Host
+# devices share this machine's cores — the numbers measure dispatch and
+# partition overhead (plumbing evidence), NOT hardware speedup, and the
+# report labels them `host-device-cpu` accordingly; the compiled
+# TPU/pod pass is the standing roadmap item.
+# ---------------------------------------------------------------------------
+
+SHARDED_DEVICES = 8
+SHARDED_WIDTHS = (1, 2, 4, 8)
+
+
+def _run_sharded_child(n: int = 128, chunk: int = 32, repeats: int = 3,
+                       seed: int = 0) -> dict:
+    """Executed inside the forced-8-device subprocess."""
+    import time
+
+    import numpy as np
+
+    from repro.core import (LocalExecutor, ShardedExecutor, pad_to_bucket,
+                            reduced_action_space, solve_fixed_batch)
+    from repro.data import generate_dense_set
+    from repro.solvers import IRConfig
+
+    space = reduced_action_space()
+    rng = np.random.default_rng(seed)
+    systems = generate_dense_set(chunk, rng, (n - 28, n))
+    rows = [pad_to_bucket(s, n, n) for s in systems]
+    acts = [space.actions[i % space.n_actions] for i in range(chunk)]
+    cfg = IRConfig(tau=1e-6)
+    A, b, x = ([r[i] for r in rows] for i in range(3))
+
+    def bench(executor):
+        solve_fixed_batch(A, b, x, acts, cfg, chunk,
+                          executor=executor)        # compile + warm
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            solve_fixed_batch(A, b, x, acts, cfg, chunk, executor=executor)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    entries = []
+    for w in SHARDED_WIDTHS:
+        ex = ShardedExecutor(data=w)
+        wall = bench(ex)
+        entries.append({"data": w, "wall_s": wall,
+                        "solves_per_s": chunk / wall,
+                        "mesh_shape": ex.mesh_shape()})
+    local_wall = bench(LocalExecutor())
+    base = chunk / local_wall
+    for e in entries:
+        e["speedup_vs_local"] = e["solves_per_s"] / base
+    jax_dev = __import__("jax").device_count()
+    return {"label": "host-device-cpu",
+            "note": ("forced host devices share one CPU; scaling shows "
+                     "partition overhead, not hardware speedup"),
+            "device_count": jax_dev, "n": n, "chunk": chunk,
+            "local_solves_per_s": base, "entries": entries}
+
+
+def run_sharded(full: bool = False, recompute: bool = False) -> list:
+    cached = None if recompute else load_report("task_bench_sharded")
+    if cached is None:
+        import json
+        import subprocess
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count="
+                            f"{SHARDED_DEVICES}")
+        src = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--sharded-child"],
+            env=env, capture_output=True, text=True, timeout=1800)
+        if out.returncode != 0:
+            raise RuntimeError("sharded child failed:\n" + out.stderr[-3000:])
+        cached = json.loads(out.stdout.splitlines()[-1])
+        save_report("task_bench_sharded", cached)
+    rows = []
+    for e in cached["entries"]:
+        us = 1e6 * e["wall_s"] / max(cached["chunk"], 1)
+        derived = (f"solves_per_s={e['solves_per_s']:.2f};"
+                   f"speedup_vs_local={e['speedup_vs_local']:.2f};"
+                   f"label={cached['label']}")
+        rows.append(f"task/sharded/d{e['data']},{us:.0f},{derived}")
+    return rows
+
+
 if __name__ == "__main__":
-    for r in run(full="--full" in sys.argv,
-                 recompute="--recompute" in sys.argv):
-        print(r)
+    if "--sharded-child" in sys.argv:
+        import json
+        print(json.dumps(_run_sharded_child()))
+    elif "--sharded" in sys.argv:
+        for r in run_sharded(recompute="--recompute" in sys.argv):
+            print(r)
+    else:
+        for r in run(full="--full" in sys.argv,
+                     recompute="--recompute" in sys.argv):
+            print(r)

@@ -16,7 +16,8 @@ Layered solver-agnostically around the `TunableTask` API:
   * `env.py` — the deprecated `GMRESIREnv` shim (engine + GMRES-IR task
     fused, kept for pre-TunableTask call sites).
 """
-from .action_space import (ActionSpace, full_action_space, is_monotone,
+from .action_space import (ActionSpace, fp8_reduced_action_space,
+                           full_action_space, is_monotone,
                            reduced_action_space, reduced_size)
 from .autotune import (TrainConfig, TrainHistory, as_engine,
                        evaluate_fixed_action, evaluate_policy, train_policy)
@@ -26,6 +27,10 @@ from .batching import (SolveRecord, bucket_of, pad_to_bucket,
 from .discretize import Discretizer
 from .engine import AutotuneEngine
 from .env import GMRESIREnv
+from .executor import (LocalExecutor, ShardedExecutor, SolveExecutor,
+                       available_executors, default_executor,
+                       register_executor, resolve_executor,
+                       set_default_executor)
 from .policy import PrecisionPolicy
 from .rewards import (RewardConfig, W1, W2, accuracy_term, penalty_term,
                       precision_term, reward, reward_batch)
@@ -33,8 +38,12 @@ from .task import (CONVERGED, FAILED, MAXITER, STAGNATED, Outcome,
                    TunableTask, coerce_task, is_tunable_task)
 
 __all__ = [
-    "ActionSpace", "full_action_space", "is_monotone",
-    "reduced_action_space", "reduced_size", "TrainConfig", "TrainHistory",
+    "ActionSpace", "fp8_reduced_action_space", "full_action_space",
+    "is_monotone", "reduced_action_space", "reduced_size",
+    "SolveExecutor", "LocalExecutor", "ShardedExecutor",
+    "resolve_executor", "default_executor", "set_default_executor",
+    "register_executor", "available_executors",
+    "TrainConfig", "TrainHistory",
     "as_engine", "evaluate_fixed_action", "evaluate_policy", "train_policy",
     "QTable", "epsilon_schedule", "Discretizer", "AutotuneEngine",
     "GMRESIREnv", "SolveRecord", "bucket_of", "pad_to_bucket",

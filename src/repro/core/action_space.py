@@ -14,7 +14,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.precision import FORMAT_ID, FORMATS, SOLVER_LADDER
+from repro.precision import (FORMAT_ID, FORMATS, SOLVER_LADDER,
+                             SOLVER_LADDER_FP8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +66,20 @@ def reduced_action_space(ladder: Sequence[str] = tuple(SOLVER_LADDER),
     actions = np.asarray([[FORMAT_ID[ladder[i]] for i in row] for row in idx],
                          dtype=np.int32)
     return ActionSpace(tuple(ladder), k, actions, idx)
+
+
+def fp8_reduced_action_space(k: int = 4,
+                             subsample: Optional[int] = None,
+                             seed: int = 0) -> ActionSpace:
+    """The fp8-extended reduced space: the `SOLVER_LADDER`-derived Eq. 11
+    construction over `SOLVER_LADDER_FP8` (e5m2/e4m3 prepended as the
+    cheapest rungs). m=6, k=4 gives C(9, 4) = 126 monotone actions —
+    `subsample` prunes as in the paper while always keeping the
+    all-e5m2 and all-fp64 extremes. The fp8 formats saturate on
+    overflow, so u_f = fp8 arms fail soft (clamped factors -> more
+    refinement) instead of hard (inf-poisoned LU)."""
+    return reduced_action_space(tuple(SOLVER_LADDER_FP8), k,
+                                subsample=subsample, seed=seed)
 
 
 def full_action_space(ladder: Sequence[str] = tuple(SOLVER_LADDER),

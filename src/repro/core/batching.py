@@ -17,16 +17,21 @@ row-loop variant, on either precision backend.
 
 `bucket_of` itself lives in the solver-free `core.task` module (the
 engine buckets work without knowing any solver) and is re-exported here
-for backward compatibility.
+for backward compatibility. Device placement and dispatch moved to
+`core.executor` (DESIGN.md §7): `solve_fixed_batch` is now a thin shim
+that stacks rows and hands the fixed-shape batch to a `SolveExecutor`
+(single-device vmapped by default, mesh-sharded on request), kept for
+the pre-executor call sites.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import List, Sequence
 
-import jax.numpy as jnp
+import jax
 import numpy as np
 
+from repro.core.executor import resolve_executor
 from repro.core.task import bucket_of
 from repro.data.matrices import LinearSystem, pad_system
 from repro.solvers.ir import IRConfig, gmres_ir_batch
@@ -53,13 +58,13 @@ def pad_to_bucket(system: LinearSystem, bucket_step: int = 128,
 
 
 def records_from_stats(stats, count: int) -> List[SolveRecord]:
-    """First `count` rows of a batched SolveStats as host SolveRecords."""
-    ferr = np.asarray(stats.ferr)
-    nbe = np.asarray(stats.nbe)
-    n_outer = np.asarray(stats.n_outer)
-    n_gmres = np.asarray(stats.n_gmres)
-    status = np.asarray(stats.status)
-    res = np.asarray(stats.res_norm)
+    """First `count` rows of a batched SolveStats as host SolveRecords.
+
+    The whole stats tuple comes to the host in ONE `jax.device_get`
+    (six per-field transfers would mean six device->host round trips —
+    and six cross-device gathers once the stats live on a mesh)."""
+    ferr, nbe, n_outer, n_gmres, status, res = (
+        np.asarray(f) for f in jax.device_get(tuple(stats)))
     return [SolveRecord(float(ferr[j]), float(nbe[j]), int(n_outer[j]),
                         int(n_gmres[j]), int(status[j]), float(res[j]))
             for j in range(count)]
@@ -70,21 +75,30 @@ def solve_fixed_batch(A_rows: Sequence[np.ndarray],
                       x_rows: Sequence[np.ndarray],
                       action_rows: Sequence[np.ndarray],
                       ir_cfg: IRConfig, chunk: int,
-                      backend=None) -> List[SolveRecord]:
-    """One fixed-shape `gmres_ir_batch` call over already-padded rows.
+                      backend=None, executor=None) -> List[SolveRecord]:
+    """One fixed-shape `gmres_ir_batch` dispatch over already-padded rows.
 
-    All rows must share one padded size n_pad; the batch dimension is padded
-    to exactly `chunk` rows by repeating row 0, keeping the compiled shape
-    constant. Returns one SolveRecord per *input* row (pad rows dropped).
-    `backend` selects the precision backend (DESIGN.md §6); the solver
-    entry point coerces rows to the backend's carrier dtype. Buckets at
-    or above `ir_cfg.blocking.min_n` run the blocked LU + trisolve hot
-    path (DESIGN.md §6.4) inside the same vmapped executable.
+    All rows must share one padded size n_pad; the batch dimension is
+    padded to exactly the executor's `preferred_chunk(chunk)` rows by
+    repeating row 0, keeping the compiled shape constant. Returns one
+    SolveRecord per *input* row (pad rows dropped). `backend` selects
+    the precision backend (DESIGN.md §6); the solver entry point coerces
+    rows to the backend's carrier dtype. `executor` selects device
+    placement (DESIGN.md §7): None/"local" is the historical
+    single-device vmapped path, "sharded" lays the batch over a device
+    mesh. Buckets at or above `ir_cfg.blocking.min_n` run the blocked
+    LU + trisolve hot path (DESIGN.md §6.4) inside the same vmapped
+    executable.
     """
+    from repro.precision import resolve_backend
     from repro.tasks.base import stack_fixed
+    ex = resolve_executor(executor)
+    bk = resolve_backend(backend)
     A, b, x, acts, k = stack_fixed(list(zip(A_rows, b_rows, x_rows)),
-                                   action_rows, chunk)
-    stats = gmres_ir_batch(jnp.asarray(A), jnp.asarray(b), jnp.asarray(x),
-                           jnp.asarray(acts, jnp.int32), ir_cfg,
-                           backend=backend)
+                                   action_rows, ex.preferred_chunk(chunk))
+    stats = ex.dispatch(
+        lambda Ai, bi, xi, ai: gmres_ir_batch(Ai, bi, xi, ai, ir_cfg,
+                                              backend=bk),
+        (A, b, x, acts), A.shape[-1],
+        key=(gmres_ir_batch, ir_cfg, bk))
     return records_from_stats(stats, k)

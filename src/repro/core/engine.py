@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.bandit import QTable
 from repro.core.discretize import Discretizer
+from repro.core.executor import resolve_executor
 from repro.core.policy import PrecisionPolicy
 from repro.core.task import Outcome, TunableTask
 
@@ -33,11 +34,23 @@ from repro.core.task import Outcome, TunableTask
 class AutotuneEngine:
     def __init__(self, task: TunableTask, reward_cfg=None,
                  chunk: int = 32, seed: int = 0,
-                 policy: Optional[PrecisionPolicy] = None):
+                 policy: Optional[PrecisionPolicy] = None,
+                 executor=None):
         self.task = task
         self.reward_cfg = reward_cfg
         self.chunk = chunk
         self.policy = policy
+        # The executor rides through the solve cache (DESIGN.md §7):
+        # chunks are rounded to its dispatch granularity, so padded-row
+        # accounting below reflects what actually ran on the devices.
+        # An explicit `executor` is pushed onto the task (same move the
+        # server makes) — the task's solve_rows is where dispatch
+        # happens, so engine-side chunk policy and task-side placement
+        # must agree. Default: the task's own executor.
+        if executor is not None:
+            self.task.executor = resolve_executor(executor)
+        self.executor = resolve_executor(
+            getattr(self.task, "executor", None))
         self._rng = np.random.default_rng(seed)
         self._prepared: Dict[int, object] = {}   # instance idx -> rows
         self._cache: Dict[Tuple[int, int], Outcome] = {}
@@ -80,15 +93,19 @@ class AutotuneEngine:
         for p in miss:
             key = self.task.bucket_key(self.task.instances[p[0]])
             by_bucket.setdefault(key, []).append(p)
-        for _, plist in sorted(by_bucket.items()):
-            for c0 in range(0, len(plist), self.chunk):
-                chunk_pairs = plist[c0:c0 + self.chunk]
+        for bucket, plist in sorted(by_bucket.items()):
+            # Executor granularity: a mesh executor rounds the chunk up
+            # to a multiple of its data-axis width, and the pad-row
+            # stats must count those extra rows — they run on devices.
+            chunk = self.executor.preferred_chunk(self.chunk, bucket)
+            for c0 in range(0, len(plist), chunk):
+                chunk_pairs = plist[c0:c0 + chunk]
                 outs = self.task.solve_rows(
                     [self._prep(i) for i, _ in chunk_pairs],
                     [self.action_space.actions[a] for _, a in chunk_pairs],
-                    self.chunk)
+                    chunk)
                 self.n_solves += len(chunk_pairs)
-                self.n_pad_solves += self.chunk - len(chunk_pairs)
+                self.n_pad_solves += chunk - len(chunk_pairs)
                 for p, out in zip(chunk_pairs, outs):
                     self._cache[p] = out
 
@@ -118,12 +135,20 @@ class AutotuneEngine:
     def cache_size(self) -> int:
         return len(self._cache)
 
-    def summarize(self) -> Dict[str, int]:
-        """Solver-work accounting: real rows vs fixed-shape padding waste."""
+    def summarize(self) -> Dict[str, float]:
+        """Solver-work accounting: real rows vs fixed-shape padding
+        waste, plus the per-device view (rows are spread evenly over the
+        executor's mesh, so per-device counts are totals / devices)."""
+        d = max(1, self.executor.device_count())
+        total = self.n_solves + self.n_pad_solves
         return {"n_solves": self.n_solves,
                 "n_pad_solves": self.n_pad_solves,
                 "n_requests": self.n_requests,
-                "cache_size": self.cache_size}
+                "cache_size": self.cache_size,
+                "n_devices": d,
+                "rows_per_device": total // d,
+                "n_solves_per_device": self.n_solves / d,
+                "n_pad_solves_per_device": self.n_pad_solves / d}
 
     # -- selection + learning ---------------------------------------------
     def fit_policy(self, n_bins, alpha=0.5, seed: int = 0

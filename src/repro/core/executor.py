@@ -1,0 +1,342 @@
+"""Solve executors: device placement + dispatch of fixed-shape batches
+(DESIGN.md §7).
+
+Every solve the engine or the serving micro-batcher runs is a
+fixed-shape stacked batch — `(chunk, n_pad, n_pad)` matrices plus their
+`(chunk, n_pad)` vectors and `(chunk, k)` action rows. A `SolveExecutor`
+is the one object that owns where those arrays live and how the batched
+solver executable is dispatched over them:
+
+  * `LocalExecutor` — the historical single-device vmapped path
+    (extracted from `core.batching.solve_fixed_batch`): arrays go to the
+    default device, one executable per size bucket.
+  * `ShardedExecutor` — a `("data", "model")` `jax.sharding.Mesh`:
+    batch rows are laid over the "data" axis via `NamedSharding` on the
+    stacked arrays, so one engine sweep spans every device of the mesh;
+    for systems of `model_min_n` and above the system (row) dimension is
+    additionally laid over "model" with the same divisibility-checked
+    `_fit` rule the LM substrate uses (`distributed/sharding`). The
+    chunk is auto-rounded up to a multiple of the data-axis size
+    (`preferred_chunk`), so the compiled shape stays bucket-stable no
+    matter how many rows a flush happens to carry.
+
+The data-axis layout dispatches through `shard_map`: every device runs
+the *unpartitioned* per-shard program on its slice of the batch. This
+is what makes cross-executor bit-equality constructive — the per-row
+program is byte-for-byte the local one (batched == single row results
+are already pinned by the backend suite), whereas letting GSPMD
+partition the solver body changes reduction lowering with the program
+context (measured: a mesh shard holding one row compiles a batch-1 dot
+that accumulates differently). The "model"-axis layout for huge systems
+IS GSPMD-partitioned (collectives inside the row are the point there)
+and sits outside the bit-parity contract — see DESIGN.md §7.2.
+
+Executors are tiny frozen dataclasses, hashing by value like
+`BlockingPolicy` and the precision backends: wrapped batch callables
+are memoized per (executor, caller key) — `batch_callable` — so
+switching executors costs exactly one extra executable per bucket while
+the format ids stay runtime data (the §3.4 invariant is untouched), and
+equal-valued executors share executables. Cross-executor SolveRecord
+bit-equality is asserted by `tests/test_executor.py` on a forced
+8-device host mesh.
+
+This module is solver-free (the engine and serving stack import it);
+selection mirrors the precision backends: explicit argument >
+`set_default_executor` > ``REPRO_SOLVE_EXECUTOR`` env var > ``"local"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+ENV_VAR = "REPRO_SOLVE_EXECUTOR"
+
+
+class SolveExecutor:
+    """Interface shared by all solve executors (duck-typed; this base
+    class documents the contract and hosts shared helpers)."""
+
+    name: str = "abstract"
+
+    # -- chunk policy ------------------------------------------------------
+    def preferred_chunk(self, chunk: int, bucket: int = 0) -> int:
+        """Dispatch granularity: the smallest batch size >= `chunk` this
+        executor can lay out without a ragged device dimension. The
+        engine sizes its fixed-shape chunks and the micro-batcher its
+        flush target with this, so compiled shapes stay bucket-stable."""
+        raise NotImplementedError
+
+    # -- placement + dispatch ----------------------------------------------
+    def shard(self, arrays: Sequence, n_pad: int) -> Tuple:
+        """Place stacked batch arrays (leading dim = chunk) on this
+        executor's devices."""
+        raise NotImplementedError
+
+    def wrap(self, solve_fn: Callable) -> Callable:
+        """`(arrays, n_pad) -> result` callable dispatching `solve_fn`
+        on this executor. May build jitted machinery — callers should
+        reuse the wrapper (or go through `batch_callable`, which
+        memoizes it) rather than re-wrapping per call."""
+        def run(arrays, n_pad: int):
+            return solve_fn(*self.shard(arrays, n_pad))
+        return run
+
+    def dispatch(self, solve_fn: Callable, arrays: Sequence, n_pad: int,
+                 key=None):
+        """Run a batched solver entry point over placed arrays.
+
+        `key` (any hashable; defaults to `solve_fn` itself) memoizes the
+        wrapped callable: callers that pass fresh lambdas MUST provide a
+        stable key describing the computation — (entry point, config,
+        backend) — or a sharded executor would rebuild (and recompile)
+        its dispatch wrapper on every call."""
+        return batch_callable(self, solve_fn if key is None else key,
+                              solve_fn)(arrays, n_pad)
+
+    # -- accounting --------------------------------------------------------
+    def device_count(self) -> int:
+        raise NotImplementedError
+
+    def mesh_shape(self) -> Optional[Dict[str, int]]:
+        """Axis-name -> size of the execution mesh (None when local)."""
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalExecutor(SolveExecutor):
+    """Single-device vmapped dispatch — the historical
+    `solve_fixed_batch` behavior, now behind the executor contract."""
+
+    name: str = dataclasses.field(default="local", init=False)
+
+    def preferred_chunk(self, chunk: int, bucket: int = 0) -> int:
+        return int(chunk)
+
+    def shard(self, arrays, n_pad: int):
+        return tuple(arrays)
+
+    def device_count(self) -> int:
+        return 1
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """shard_map across jax versions (kwarg renamed check_rep ->
+    check_vma when it moved to the jax namespace)."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+# One Mesh per (data, model) shape per process: Mesh construction is
+# cheap but identity matters for jit cache reuse across executor
+# instances that hash equal.
+_MESH_CACHE: Dict[Tuple[int, int], Mesh] = {}
+
+
+def _mesh_for(data: int, model: int) -> Mesh:
+    key = (int(data), int(model))
+    if key not in _MESH_CACHE:
+        devs = jax.devices()
+        need = key[0] * key[1]
+        if need > len(devs):
+            raise ValueError(
+                f"ShardedExecutor mesh ({key[0]} data x {key[1]} model) "
+                f"needs {need} devices but the host exposes {len(devs)} "
+                "(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                "for a host-device mesh)")
+        _MESH_CACHE[key] = Mesh(
+            np.asarray(devs[:need]).reshape(key), ("data", "model"))
+    return _MESH_CACHE[key]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedExecutor(SolveExecutor):
+    """Mesh dispatch: batch rows over "data", big systems over "model".
+
+    `data=None` sizes the data axis to every device the host exposes
+    (divided by `model`); an explicit `data` pins the mesh width (the
+    scaling benchmark sweeps it). The data-axis layout dispatches
+    through `shard_map` — each device runs the unpartitioned per-shard
+    program, which is what makes it bit-identical to `LocalExecutor`
+    (DESIGN.md §7.3).
+
+    The system dimension only joins the "model" axis at `n_pad >=
+    model_min_n`: below that, row-dimension collectives cost more than
+    they parallelize. That path IS GSPMD-partitioned (the partitioner
+    inserts the row-dimension collectives), so it sits outside the
+    bit-parity contract — partitioning within a row changes reduction
+    structure (DESIGN.md §7.2).
+    """
+
+    name: str = dataclasses.field(default="sharded", init=False)
+    data: Optional[int] = None
+    model: int = 1
+    model_min_n: int = 1024
+
+    # -- mesh --------------------------------------------------------------
+    def data_size(self) -> int:
+        if self.data is not None:
+            return int(self.data)
+        return max(1, jax.device_count() // int(self.model))
+
+    def mesh(self) -> Mesh:
+        return _mesh_for(self.data_size(), self.model)
+
+    def device_count(self) -> int:
+        return self.data_size() * int(self.model)
+
+    def mesh_shape(self) -> Dict[str, int]:
+        return {"data": self.data_size(), "model": int(self.model)}
+
+    # -- chunk policy ------------------------------------------------------
+    def preferred_chunk(self, chunk: int, bucket: int = 0) -> int:
+        """Round up to a multiple of the data-axis size, so every
+        device carries the same number of rows and the compiled shape
+        is stable per bucket."""
+        d = self.data_size()
+        return max(d, -(-int(chunk) // d) * d)
+
+    def _model_engaged(self, n_pad: int, mesh: Mesh) -> bool:
+        from repro.distributed.sharding import _fit
+        return (n_pad >= self.model_min_n
+                and _fit(n_pad, "model", mesh) is not None)
+
+    # -- placement ---------------------------------------------------------
+    def _spec(self, shape: Tuple[int, ...], n_pad: int, mesh: Mesh) -> P:
+        # Divisibility-checked axis fitting, shared with the LM
+        # substrate's batch_spec rules (drop the axis rather than pad).
+        from repro.distributed.sharding import _fit
+        entries = [_fit(shape[0], "data", mesh)]
+        entries += [None] * (len(shape) - 1)
+        if len(shape) == 3 and shape[1] == n_pad \
+                and self._model_engaged(n_pad, mesh):
+            entries[1] = _fit(n_pad, "model", mesh)
+        return P(*entries)
+
+    def shard(self, arrays, n_pad: int):
+        mesh = self.mesh()
+        return tuple(
+            jax.device_put(a, NamedSharding(
+                mesh, self._spec(np.shape(a), n_pad, mesh)))
+            for a in arrays)
+
+    # -- dispatch ----------------------------------------------------------
+    def wrap(self, solve_fn: Callable) -> Callable:
+        mesh = self.mesh()
+        d = self.data_size()
+
+        @jax.jit
+        def data_sharded(*arrays):
+            in_specs = tuple(P("data", *([None] * (a.ndim - 1)))
+                             for a in arrays)
+            return _shard_map(solve_fn, mesh, in_specs, P("data"))(*arrays)
+
+        def run(arrays, n_pad: int):
+            chunk = np.shape(arrays[0])[0]
+            if chunk % d:
+                raise ValueError(
+                    f"batch of {chunk} rows does not divide over the "
+                    f"{d}-wide data axis; size batches with "
+                    "preferred_chunk()")
+            placed = self.shard(arrays, n_pad)
+            if self._model_engaged(n_pad, mesh):
+                # Huge systems: GSPMD lays rows over "model" and
+                # partitions the solver body (collectives inside the
+                # row). Outside the bit-parity contract by design.
+                return solve_fn(*placed)
+            return data_sharded(*placed)
+
+        run._jit = data_sharded   # compile-accounting hook for tests
+        return run
+
+
+# ---------------------------------------------------------------------------
+# Wrapped-callable memo
+# ---------------------------------------------------------------------------
+
+# (executor, key) -> wrapped batch callable. Executors are frozen
+# value-hashed dataclasses, so equal executors share wrappers (and
+# therefore compiled executables). Keys must uniquely describe the
+# computation — callers use (entry point, solver config, backend).
+_WRAPPED: Dict[tuple, Callable] = {}
+
+
+def batch_callable(executor: "SolveExecutor", key,
+                   solve_fn: Callable) -> Callable:
+    """Memoized `executor.wrap(solve_fn)`.
+
+    The first `solve_fn` registered for (executor, key) wins; callers
+    passing fresh lambdas must ensure equal keys imply identical
+    computations."""
+    k = (executor, key)
+    if k not in _WRAPPED:
+        _WRAPPED[k] = executor.wrap(solve_fn)
+    return _WRAPPED[k]
+
+
+# ---------------------------------------------------------------------------
+# Registry + selection (mirrors precision.backend)
+# ---------------------------------------------------------------------------
+
+ExecutorLike = Union[None, str, SolveExecutor]
+
+_REGISTRY: Dict[str, Callable[[], SolveExecutor]] = {
+    "local": LocalExecutor,
+    "sharded": ShardedExecutor,
+}
+_DEFAULT: Optional[SolveExecutor] = None
+
+
+def register_executor(name: str,
+                      factory: Callable[[], SolveExecutor]) -> None:
+    """Register an executor factory under `name` (overwrites allowed)."""
+    _REGISTRY[name] = factory
+
+
+def available_executors():
+    return sorted(_REGISTRY)
+
+
+def _from_name(name: str) -> SolveExecutor:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown solve executor {name!r}; "
+                       f"available: {available_executors()}")
+    return _REGISTRY[name]()
+
+
+def set_default_executor(executor: ExecutorLike) -> Optional[SolveExecutor]:
+    """Set the process-wide default executor (None restores env/'local'
+    resolution). Returns the previous override, for save/restore."""
+    global _DEFAULT
+    prev = _DEFAULT
+    _DEFAULT = (resolve_executor(executor)
+                if executor is not None else None)
+    return prev
+
+
+def default_executor() -> SolveExecutor:
+    if _DEFAULT is not None:
+        return _DEFAULT
+    return _from_name(os.environ.get(ENV_VAR, "local"))
+
+
+def resolve_executor(executor: ExecutorLike = None) -> SolveExecutor:
+    """Coerce an executor spec (instance | name | None=default) into an
+    executor instance. Pure Python — safe to call before tracing."""
+    if executor is None:
+        return default_executor()
+    if isinstance(executor, str):
+        return _from_name(executor)
+    return executor

@@ -131,6 +131,10 @@ def coerce_task(obj, *, action_space=None, bucket_step=None,
     adapt a legacy solver-config object (e.g. an `IRConfig`, or None
     for the historical default) via `repro.tasks.adapt_legacy`.
 
+    Executor overrides are NOT plumbed here: callers that want one set
+    `task.executor` on the result (the server and engine both do),
+    which covers adapted and real tasks with one mechanism.
+
     The import is deferred so this module — and everything built only
     on the protocol, like `core.engine` and `service.server` — stays
     free of solver dependencies.

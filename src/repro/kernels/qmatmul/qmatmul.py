@@ -65,18 +65,21 @@ def _qmv_kernel(fmt_ref, a_ref, v_ref, o_ref):
     The reduction is the VPU-friendly row-sum over the full (lane-padded)
     K axis in one block — deliberately NOT an MXU dot: a matvec is
     memory-bound, and the single-block row-sum gives the jnp oracle
-    (`ref.qmv_ref`) an identical reduction shape, which is what makes the
-    backend dispatch layer bit-exact across implementations
-    (DESIGN.md §6.2). Per-row reductions are invariant to tiling over
-    rows, so the grid over M does not perturb results.
+    (`ref.qmv_ref`) an identical reduction: the product is materialized
+    behind the FMA barrier and accumulated by the fixed pairwise tree,
+    the exact ops the oracle traces, which is what makes the backend
+    dispatch layer bit-exact across implementations and program
+    contexts (DESIGN.md §6.2, §7.3). Per-row reductions are invariant
+    to tiling over rows, so the grid over M does not perturb results.
     """
+    from repro.precision import fma_barrier, tree_sum
     t = fmt_ref[0]
     emin = fmt_ref[1]
     xmax_bits = fmt_ref[2].astype(jnp.uint32)
     saturate = fmt_ref[3] != 0
     a = _chop_core(a_ref[...], t, emin, 0, xmax_bits, saturate)
     v = _chop_core(v_ref[...], t, emin, 0, xmax_bits, saturate)
-    out = jnp.sum(a * v, axis=1)                       # carrier accumulation
+    out = tree_sum(fma_barrier(a * v), axis=1)         # carrier accumulation
     chopped = _chop_core(out, t, emin, 0, xmax_bits, saturate)
     out = jnp.where(fmt_ref[4] != 0, chopped, out)
     o_ref[...] = out.reshape(o_ref.shape)

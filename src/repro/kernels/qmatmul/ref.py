@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.precision import chop
+from repro.precision import chop, fma_barrier, tree_sum
 
 # TPU lane width. Single source of truth for the K padding that both the
 # pallas kernel (qmatmul.qmv_pallas via ops.qmv_op) and this oracle
@@ -29,7 +29,14 @@ def qmv_ref(a: jnp.ndarray, v: jnp.ndarray, fmt_id,
     vp = jnp.pad(v, (0, Kp - K))
     ac = chop(ap, fmt_id)
     vc = chop(vp, fmt_id)
-    out = jnp.sum(ac * vc[None, :], axis=1)        # carrier accumulation
+    # Carrier accumulation, fully pinned: the product is materialized
+    # behind the FMA barrier (no context-dependent mul-into-reduce
+    # contraction) and the row-sum is the fixed pairwise tree (no
+    # context-dependent accumulation order) — the reduction shape alone
+    # does not pin the bits once the surrounding program changes, e.g.
+    # in a shard_map body (DESIGN.md §6.2, §7.3). The kernel body
+    # executes the same barrier + tree.
+    out = tree_sum(fma_barrier(ac * vc[None, :]), axis=1)
     if chop_out:
         out = chop(out, fmt_id)
     return out

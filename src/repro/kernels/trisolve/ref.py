@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.precision.chop import chop as _chop_runtime
+from repro.precision.chop import tree_sum
 
 # Block sizes are lane-aligned by the default policy (128); the core
 # itself only requires n % block == 0 (ops/ref pad via `pad_unit`).
@@ -66,11 +67,12 @@ def _trisolve_core(Lu: jnp.ndarray, b2d: jnp.ndarray, chop_fn, *,
             yj = lax.dynamic_slice(y, (0, j * block), (1, block))
             # Chopped matvec tile, strict-path product semantics:
             # products rounded to the format, carrier row-sum. Rounding
-            # the products (an integer-bitcast chain) also pins the
-            # bits: it blocks FMA contraction of the multiply into the
-            # row-sum, which XLA would otherwise apply or not depending
-            # on the surrounding fusion context (DESIGN.md §6.2).
-            return acc + jnp.sum(chop_fn(tile * yj), axis=1)[None, :]
+            # the products (an integer-bitcast chain) blocks FMA
+            # contraction of the multiply into the row-sum, and the
+            # fixed pairwise tree pins the accumulation order, both of
+            # which XLA would otherwise pick per program context
+            # (DESIGN.md §6.2, §7.3).
+            return acc + tree_sum(chop_fn(tile * yj), axis=1)[None, :]
 
         lo, hi = (0, i) if lower else (i + 1, nb)
         acc = lax.fori_loop(lo, hi, off_body,
@@ -88,7 +90,7 @@ def _trisolve_core(Lu: jnp.ndarray, b2d: jnp.ndarray, chop_fn, *,
             lrow = lax.dynamic_slice(tri, (r, 0), (1, block))
             prods = chop_fn(lrow * yb)
             mask = (idx < r) if lower else (idx > r)
-            s = jnp.sum(jnp.where(mask, prods, zero))
+            s = tree_sum(jnp.where(mask, prods, zero).reshape(-1))
             val = chop_fn(t[0, r] - s)
             if not lower:
                 d = tri[r, r]

@@ -137,6 +137,68 @@ def _chop_core(x: jnp.ndarray, t, emin, emax, xmax_bits, saturate) -> jnp.ndarra
     return lax.bitcast_convert_type(out_bits, dtype)
 
 
+def fma_barrier(x: jnp.ndarray) -> jnp.ndarray:
+    """Identity on values, opaque to FMA contraction (DESIGN.md §6.2).
+
+    `_chop_core`'s integer-bitcast chain is what pins the bits of every
+    *chopped* intermediate; this applies the same chain to values that
+    must stay unrounded (carrier accumulations) by rounding to the
+    carrier's OWN format — RNE of an f64 to 53 significand bits (or an
+    f32 to 24) is exact, so the value is untouched while the product is
+    materialized through real, data-dependent integer arithmetic that
+    no simplifier can cancel. Without it, XLA may contract the
+    producing multiply into a following add/reduction as an FMA
+    depending on each program's fusion context, shifting the
+    accumulated bits (measured). Weaker barriers do not survive
+    compilation: a bitcast round trip is cancelled by the algebraic
+    simplifier, and `lax.optimization_barrier` is elided before fusion
+    on XLA:CPU, after which the emitter contracts anyway (both
+    measured — a padded and an unpadded solve of the same system
+    disagreed in the final residual only under jit).
+    """
+    x = jnp.asarray(x)
+    if x.dtype not in _CARRIERS:
+        raise TypeError(f"unsupported carrier dtype {x.dtype}")
+    _, _, MBITS, _, _ = _CARRIERS[x.dtype]
+    f = get_format("fp64" if x.dtype == jnp.dtype(jnp.float64) else "fp32")
+    assert f.t == MBITS + 1     # carrier-exact: rounding is the identity
+    return _chop_core(x, f.t, f.emin, f.emax, _fmt_xmax_bits(f, x.dtype),
+                      False)
+
+
+def tree_sum(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Sum along `axis` with a FIXED pairwise reduction tree.
+
+    `jnp.sum` lowers to an XLA reduce whose accumulation order is
+    implementation-defined — and it *varies with the compilation
+    context* (plain jit vs a shard_map body, measured on XLA:CPU), so
+    two programs tracing identical ops can disagree in the low bits of
+    a carrier accumulation. Floating-point adds are not associative and
+    XLA never re-associates *explicit* adds, so a halving tree of
+    explicit adds pins the order in any context: fold the upper half
+    onto the lower half, log2(n) times. Odd widths park their last
+    element in a running tail accumulator added once at the end — no
+    `concatenate`, deliberately, since this also runs inside the Pallas
+    qmv kernel body and sub-lane concatenates are a Mosaic lowering
+    risk. Every unrounded carrier reduction on the solver hot path goes
+    through this (DESIGN.md §6.2, §7.3)."""
+    x = jnp.asarray(x)
+    axis = axis % x.ndim
+    x = jnp.moveaxis(x, axis, -1)
+    if x.shape[-1] == 0:
+        return jnp.zeros(x.shape[:-1], x.dtype)
+    tail = None
+    while x.shape[-1] > 1:
+        n = x.shape[-1]
+        m = n // 2
+        if n % 2:
+            last = x[..., n - 1]
+            tail = last if tail is None else tail + last
+        x = x[..., :m] + x[..., m:2 * m]
+    out = x[..., 0]
+    return out if tail is None else out + tail
+
+
 def _fmt_xmax_bits(f: FloatFormat, dtype) -> int:
     if dtype == jnp.dtype(jnp.float64):
         return int(np.float64(f.xmax).view(np.uint64))

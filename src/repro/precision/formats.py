@@ -81,6 +81,14 @@ FORMAT_ID: Dict[str, int] = {f.name: i for i, f in enumerate(FORMAT_LIST)}
 # The paper's solver precision ladder (Section 5.1), ordered by increasing
 # significand bits — the ordering relation of Eq. 11.
 SOLVER_LADDER: List[str] = ["bf16", "tf32", "fp32", "fp64"]
+# The fp8-extended solver ladder: the ML fp8 formats prepended below the
+# paper's four rungs (still ordered by significand bits — e5m2 t=3,
+# e4m3 t=4). Their saturating overflow (clamp to +-xmax instead of inf)
+# is what makes u_f = fp8 a *viable* arm on well-conditioned systems:
+# an overflowed LU clamps rather than poisoning the factors with inf,
+# so the refinement loop can still converge and the bandit can learn
+# where the cheap factorization pays off.
+SOLVER_LADDER_FP8: List[str] = ["e5m2", "e4m3"] + SOLVER_LADDER
 # The TPU-native ladder used by the LM-framework integration (DESIGN.md §3.3).
 TPU_LADDER: List[str] = ["e4m3", "bf16", "fp32"]
 

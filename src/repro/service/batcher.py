@@ -2,11 +2,15 @@
 
 Requests are prepared (e.g. identity-padded to their size bucket) by the
 task on submit and queued per bucket key. A bucket flushes when it holds
-`max_batch` requests (full batch) or when its oldest request has waited
-`max_wait_s` (partial batch, padded to the fixed shape by the task's
-`solve_rows`). Every flush for a given bucket therefore has an identical
-compiled shape, so XLA compiles one executable per (task, bucket) per
-process and every subsequent flush is compile-free.
+a full batch or when its oldest request has waited `max_wait_s` (partial
+batch, padded to the fixed shape by the task's `solve_rows`). The flush
+target is not the raw `max_batch` but the task executor's
+`preferred_chunk(max_batch, bucket)` (DESIGN.md §7): a mesh-sharded
+executor rounds it up to a multiple of its data-axis width, so flush
+size tracks mesh width and every device carries the same number of
+rows. Every flush for a given bucket therefore has an identical
+compiled shape, so XLA compiles one executable per (task, bucket,
+executor) per process and every subsequent flush is compile-free.
 
 The batcher knows nothing about any solver: all shape/batch semantics
 flow through the `TunableTask` hooks (`bucket_key`, `prepare`,
@@ -28,12 +32,14 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.executor import resolve_executor
 from repro.core.task import Outcome, TunableTask, coerce_task
 
 
 @dataclasses.dataclass(frozen=True)
 class BatcherConfig:
-    max_batch: int = 8          # rows per compiled batch (flush when full)
+    max_batch: int = 8          # rows per compiled batch (flush when full;
+                                # rounded up to the executor's granularity)
     max_wait_s: float = 0.05    # oldest-request deadline for partial flush
     bucket_step: int = 128      # used when adapting a legacy solver config
     min_bucket: int = 128
@@ -53,7 +59,7 @@ class FlushResult:
     bucket: int
     req_ids: List[int]
     records: List[Outcome]
-    n_rows: int                 # rows solved (== max_batch, incl. padding)
+    n_rows: int                 # rows solved (== flush target, incl. padding)
 
 
 class MicroBatcher:
@@ -62,10 +68,19 @@ class MicroBatcher:
                  clock: Callable[[], float] = time.monotonic):
         self.task = coerce_task(task, bucket_step=cfg.bucket_step,
                                 min_bucket=cfg.min_bucket)
+        # The task's executor sets the dispatch granularity; tasks
+        # without one (custom TunableTasks) get the process default.
+        self.executor = resolve_executor(
+            getattr(self.task, "executor", None))
         self.cfg = cfg
         self.clock = clock
         self._queues: Dict[int, List[_Pending]] = {}
         self._ids = itertools.count()
+
+    def flush_target(self, bucket: int) -> int:
+        """Rows per flush for `bucket`: `max_batch` rounded up to the
+        executor's dispatch granularity (mesh width)."""
+        return self.executor.preferred_chunk(self.cfg.max_batch, bucket)
 
     # -- enqueue -----------------------------------------------------------
     def submit(self, instance, action_row: np.ndarray,
@@ -88,11 +103,12 @@ class MicroBatcher:
 
     def _flush_bucket(self, bucket: int, entries: List[_Pending]
                       ) -> FlushResult:
+        target = self.flush_target(bucket)
         records = self.task.solve_rows(
             [e.rows for e in entries], [e.action_row for e in entries],
-            self.cfg.max_batch)
+            target)
         return FlushResult(bucket, [e.req_id for e in entries], records,
-                           self.cfg.max_batch)
+                           target)
 
     def pump(self, force: bool = False) -> List[FlushResult]:
         """Flush every due bucket; with force=True, flush everything."""
@@ -100,11 +116,11 @@ class MicroBatcher:
         out: List[FlushResult] = []
         for bucket in sorted(self._queues):
             q = self._queues[bucket]
+            target = self.flush_target(bucket)
             # Full batches always go.
-            while len(q) >= self.cfg.max_batch:
-                out.append(self._flush_bucket(
-                    bucket, q[:self.cfg.max_batch]))
-                del q[:self.cfg.max_batch]
+            while len(q) >= target:
+                out.append(self._flush_bucket(bucket, q[:target]))
+                del q[:target]
             # Partial batch goes on deadline (or force).
             if q and (force or
                       now - q[0].enqueued_at >= self.cfg.max_wait_s):

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core.bandit import QTable
 from repro.core.engine import AutotuneEngine
+from repro.core.executor import resolve_executor
 from repro.core.policy import PrecisionPolicy
 from repro.core.rewards import RewardConfig
 from repro.core.task import Outcome, coerce_task
@@ -82,7 +83,8 @@ class AutotuneServer:
                  online_cfg: OnlineConfig = OnlineConfig(),
                  clock: Callable[[], float] = time.monotonic,
                  seed: int = 0,
-                 max_retained_responses: int = 65536):
+                 max_retained_responses: int = 65536,
+                 executor=None):
         if isinstance(registry, PolicyRegistry):
             self.registry: Optional[PolicyRegistry] = registry
             snapshot = registry.load()
@@ -92,9 +94,16 @@ class AutotuneServer:
             snapshot = registry
             self.policy_version = "unversioned"
         # Accept a TunableTask or a legacy solver config (adapted, using
-        # this server's batcher bucket settings).
+        # this server's batcher bucket settings). An explicit `executor`
+        # (a `core.executor` spec — "local", "sharded", or an instance)
+        # overrides the task's; the micro-batcher sizes its flushes to
+        # the executor's mesh width (DESIGN.md §7).
         self.task = coerce_task(task, bucket_step=batcher_cfg.bucket_step,
                                 min_bucket=batcher_cfg.min_bucket)
+        if executor is not None:
+            self.task.executor = resolve_executor(executor)
+        self.executor = resolve_executor(
+            getattr(self.task, "executor", None))
         task_space = getattr(self.task, "action_space", None)
         if task_space is None:
             self.task.action_space = snapshot.action_space

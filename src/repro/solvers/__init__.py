@@ -1,4 +1,5 @@
 """Mixed-precision linear-solver substrate (GMRES-IR and CG-IR)."""
+from .block_autotune import sweep_lu_block, tuned_blocking
 from .blocking import (DEFAULT_BLOCKING, STRICT_ONLY, BlockingPolicy,
                        resolve_blocking)
 from .cg import CGConfig, CGStats, PCGResult, cg_ir, cg_ir_batch, pcg
@@ -17,6 +18,7 @@ __all__ = [
     "lu_factor_auto", "lu_factor_blocked", "lu_solve",
     "solve_unit_lower", "solve_upper",
     "BlockingPolicy", "DEFAULT_BLOCKING", "STRICT_ONLY", "resolve_blocking",
+    "sweep_lu_block", "tuned_blocking",
     "CONVERGED", "STAGNATED", "MAXITER", "FAILED",
     "CONDITION_RANGES", "bucket_by_condition", "eps_max", "success_rate",
     "summarize",

@@ -1,0 +1,114 @@
+"""Startup sweep for the blocked-LU panel width (DESIGN.md §6.4).
+
+`BlockingPolicy(lu_block=64)` was picked by one-off CPU measurement
+(PR 4); the right width depends on the size bucket and the precision
+backend. This module applies the bandit's own recipe to that knob:
+measure every arm once, commit to the greedy winner, cache the
+decision. `tuned_blocking(n_pad, backend)` times the blocked
+factorization + both triangular substitutions for each candidate panel
+width on a representative bucket-sized system and returns the base
+policy with `lu_block` swapped for the fastest candidate. Results are
+cached per (bucket, backend, base policy, candidates), so the sweep
+runs once per process — a startup cost of a few compiles per bucket.
+
+The tuned policy still rides the static jit key inside
+`IRConfig`/`CGConfig` (one executable per bucket); note that panel
+width is a *semantic* config, not only a schedule: partial pivoting is
+restricted to the panel, so different widths produce (legitimately)
+different factorizations. Tasks therefore opt in explicitly via
+`tune_blocking=True` (`tasks.base.LinearSystemTask`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.precision import FORMAT_ID, resolve_backend
+
+from .blocking import BlockingPolicy, resolve_blocking
+
+DEFAULT_CANDIDATES: Tuple[int, ...] = (32, 64, 128)
+
+# (n_pad, backend name, base policy, candidates) -> tuned policy.
+_CACHE: Dict[tuple, BlockingPolicy] = {}
+# Raw sweep timings, kept for introspection/benchmark reporting.
+_TIMINGS: Dict[tuple, Dict[int, float]] = {}
+
+
+def _pipeline(A, b, fmt_id, block: int, trisolve_block: int, backend):
+    """The factorization hot path a panel width governs: blocked LU +
+    the two blocked triangular substitutions of one preconditioner
+    application."""
+    from .lu import lu_factor_blocked
+    from .triangular import lu_solve
+    pol = BlockingPolicy(min_n=0, lu_block=block,
+                         trisolve_block=trisolve_block)
+    f = lu_factor_blocked(A, fmt_id, block=block, backend=backend)
+    return lu_solve(f.lu, f.perm, b, fmt_id, backend=backend, blocking=pol)
+
+
+def sweep_lu_block(n_pad: int, backend=None,
+                   candidates: Sequence[int] = DEFAULT_CANDIDATES,
+                   trisolve_block: int = 128, repeats: int = 3,
+                   seed: int = 0) -> Dict[int, float]:
+    """Wall-time per candidate panel width (seconds, best of `repeats`)
+    for an `n_pad`-sized factorization + solve on `backend`. Compile
+    time is excluded (one warmup call per candidate)."""
+    bk = resolve_backend(backend)
+    rng = np.random.default_rng(seed)
+    # Diagonally dominant representative system: pivoting stays busy but
+    # the factorization never hits the failure path mid-measurement.
+    A = rng.standard_normal((n_pad, n_pad)) + n_pad * np.eye(n_pad)
+    b = rng.standard_normal(n_pad)
+    A, b = bk.coerce(*(jax.numpy.asarray(v) for v in (A, b)))
+    fmt = FORMAT_ID["fp32"]
+    times: Dict[int, float] = {}
+    for block in candidates:
+        if block > n_pad:        # wider than the matrix: pure waste
+            continue
+        fn = jax.jit(partial(_pipeline, block=int(block),
+                             trisolve_block=int(trisolve_block),
+                             backend=bk))
+        fn(A, b, fmt).block_until_ready()          # compile outside timing
+        best = np.inf
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn(A, b, fmt).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        times[int(block)] = float(best)
+    return times
+
+
+def tuned_blocking(n_pad: int, backend=None,
+                   base: Optional[BlockingPolicy] = None,
+                   candidates: Sequence[int] = DEFAULT_CANDIDATES
+                   ) -> BlockingPolicy:
+    """`base` with `lu_block` replaced by the sweep winner for
+    (`n_pad`, `backend`). Below the base policy's threshold (or with
+    blocking disabled) the sweep is skipped — the strict path runs and
+    the panel width is irrelevant."""
+    pol = resolve_blocking(base)
+    if not pol.use_blocked(n_pad):
+        return pol
+    bk = resolve_backend(backend)
+    key = (int(n_pad), bk.name, pol, tuple(int(c) for c in candidates))
+    if key not in _CACHE:
+        times = sweep_lu_block(n_pad, backend=bk, candidates=candidates,
+                               trisolve_block=pol.trisolve_block)
+        _TIMINGS[key] = times
+        if not times:
+            _CACHE[key] = pol
+        else:
+            best = min(times, key=times.get)       # greedy over measured arms
+            _CACHE[key] = dataclasses.replace(pol, lu_block=best)
+    return _CACHE[key]
+
+
+def sweep_timings() -> Dict[tuple, Dict[int, float]]:
+    """Raw timings of every sweep this process ran (for reporting)."""
+    return dict(_TIMINGS)

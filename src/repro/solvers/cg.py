@@ -33,9 +33,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.precision import resolve_backend, rounding_unit
+from repro.precision import resolve_backend, rounding_unit, tree_sum
 
 from .blocking import DEFAULT_BLOCKING, BlockingPolicy, resolve_blocking
+from .carrier import carrier_norm, carrier_residual
 from .gmres import chop_mv
 from .ir import CONVERGED, FAILED, MAXITER, STAGNATED
 from .lu import lu_factor_auto
@@ -73,8 +74,9 @@ def _inf_norm(v):
 
 
 def _dot(a, b, fmt_id, chop):
-    """Dot product with format-rounded products, carrier accumulation."""
-    return chop(jnp.sum(chop(a * b, fmt_id)), fmt_id)
+    """Dot product with format-rounded products, carrier accumulation
+    (order pinned by the fixed pairwise tree — DESIGN.md §7.3)."""
+    return chop(tree_sum(chop(a * b, fmt_id)), fmt_id)
 
 
 def pcg(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
@@ -92,7 +94,7 @@ def pcg(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
     chop = bk.chop
     dtype = r.dtype
     r0 = chop(r, fmt_g)
-    beta0 = jnp.linalg.norm(r0)
+    beta0 = carrier_norm(r0)
     ok0 = jnp.isfinite(beta0) & (beta0 > 0)
     y0 = lu_solve(LU, perm, r0, fmt_g, backend=bk, blocking=pol)
     rho0 = _dot(r0, y0, fmt_g, chop)
@@ -113,7 +115,7 @@ def pcg(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
         alpha = chop(rho / pq_safe, fmt_g)
         z_new = chop(z + chop(alpha * p, fmt_g), fmt_g)
         rin_new = chop(rin - chop(alpha * q, fmt_g), fmt_g)
-        res = jnp.linalg.norm(rin_new)
+        res = carrier_norm(rin_new)
         y = lu_solve(LU, perm, rin_new, fmt_g, backend=bk, blocking=pol)
         rho_new = _dot(rin_new, y, fmt_g, chop)
         rho_safe = jnp.where(rho == 0, jnp.ones((), dtype), rho)
@@ -184,10 +186,11 @@ def _cg_ir_impl(A, b, x_true, action, cfg, backend) -> CGStats:
     x, _, n_outer, n_cg, status, _ = lax.while_loop(cond, body, init_state)
     status = jnp.where(lu.fail, FAILED, status)
 
-    # Final metrics in the carrier (true fp64), Eq. 17.
-    res = b - A @ x
+    # Final metrics in the carrier (true fp64), Eq. 17, with the
+    # executor-invariant residual schedule (ir.carrier_residual).
+    res = carrier_residual(A, b, x)
     res_norm = _inf_norm(res)
-    normA = jnp.max(jnp.sum(jnp.abs(A), axis=1))
+    normA = jnp.max(tree_sum(jnp.abs(A), axis=1))
     ferr = _inf_norm(x - x_true) / _inf_norm(x_true)
     nbe = res_norm / (normA * _inf_norm(x) + _inf_norm(b))
     ferr = jnp.where(jnp.isfinite(ferr), ferr, jnp.asarray(jnp.inf, dtype))

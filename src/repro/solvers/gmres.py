@@ -25,9 +25,10 @@ from typing import NamedTuple
 import jax.numpy as jnp
 from jax import lax
 
-from repro.precision import resolve_backend
+from repro.precision import resolve_backend, tree_sum
 
 from .blocking import resolve_blocking
+from .carrier import carrier_norm
 from .triangular import solve_unit_lower, solve_upper
 
 
@@ -78,7 +79,9 @@ def gmres_precond(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
                         pol)
 
     rhat = _precond(LU, perm, chop(r, fmt_g), fmt_g, bk, pol)
-    beta = jnp.linalg.norm(rhat)
+    # Unrounded carrier norms take the pinned square-then-sum schedule
+    # (solvers/carrier.py) so their bits are executor-invariant.
+    beta = carrier_norm(rhat)
     ok0 = jnp.isfinite(beta) & (beta > 0)
     beta_safe = jnp.where(ok0, beta, jnp.ones((), dtype))
     v0 = chop(rhat / beta_safe, fmt_g)
@@ -100,13 +103,13 @@ def gmres_precond(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
         def mgs(i, carry):
             w, h = carry
             vi = V[i]
-            hij = chop(jnp.sum(chop(w * vi, fmt_g)), fmt_g)
+            hij = chop(tree_sum(chop(w * vi, fmt_g)), fmt_g)
             w = chop(w - chop(hij * vi, fmt_g), fmt_g)
             return w, h.at[i].set(hij)
 
         w, h = lax.fori_loop(0, j + 1, mgs,
                              (w, jnp.zeros((m_max + 1,), dtype)))
-        hn = jnp.linalg.norm(w)
+        hn = carrier_norm(w)
         happy = hn <= jnp.asarray(1e-300 if dtype == jnp.float64 else 1e-30,
                                   dtype)
         hn_safe = jnp.where(happy, jnp.ones((), dtype), hn)
@@ -149,14 +152,14 @@ def gmres_precond(A_g: jnp.ndarray, LU: jnp.ndarray, perm: jnp.ndarray,
         rrow = R[row]
         prods = chop(rrow * y, fmt_g)
         mask = jnp.arange(m_max) > row
-        ssum = jnp.sum(jnp.where(mask, prods, zero))
+        ssum = tree_sum(jnp.where(mask, prods, zero))
         diag = rrow[row]
         dsafe = jnp.where(diag == 0, jnp.ones((), dtype), diag)
         yi = chop(chop(g[row] - ssum, fmt_g) / dsafe, fmt_g)
         return y.at[row].set(jnp.where(row < j, yi, zero))
 
     y = lax.fori_loop(0, m_max, back, jnp.zeros((m_max,), dtype))
-    z = chop(jnp.sum(chop(V[:m_max] * y[:, None], fmt_g), axis=0), fmt_g)
+    z = chop(tree_sum(chop(V[:m_max] * y[:, None], fmt_g), axis=0), fmt_g)
 
     res_rel = jnp.abs(g[j]) / beta_safe
     fail = ~ok0 | ~jnp.all(jnp.isfinite(z))

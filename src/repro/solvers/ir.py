@@ -32,9 +32,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.precision import resolve_backend, rounding_unit
+from repro.precision import resolve_backend, rounding_unit, tree_sum
 
 from .blocking import DEFAULT_BLOCKING, BlockingPolicy
+from .carrier import carrier_residual
 from .gmres import chop_mv, gmres_precond
 from .lu import lu_factor_auto
 from .triangular import lu_solve
@@ -125,10 +126,11 @@ def _gmres_ir_impl(A, b, x_true, action, cfg, backend) -> SolveStats:
     x, _, n_outer, n_gmres, status, _ = lax.while_loop(cond, body, init_state)
     status = jnp.where(lu.fail, FAILED, status)
 
-    # Final metrics in the carrier (true fp64), Eq. 17.
-    res = b - A @ x
+    # Final metrics in the carrier (true fp64), Eq. 17, with the
+    # executor-invariant residual schedule (see carrier_residual).
+    res = carrier_residual(A, b, x)
     res_norm = _inf_norm(res)
-    normA = jnp.max(jnp.sum(jnp.abs(A), axis=1))
+    normA = jnp.max(tree_sum(jnp.abs(A), axis=1))
     ferr = _inf_norm(x - x_true) / _inf_norm(x_true)
     nbe = res_norm / (normA * _inf_norm(x) + _inf_norm(b))
     bad = ~jnp.isfinite(ferr)

@@ -31,7 +31,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
-from repro.precision import resolve_backend
+from repro.precision import resolve_backend, tree_sum
 
 from .blocking import resolve_blocking
 
@@ -52,7 +52,7 @@ def solve_unit_lower(LU: jnp.ndarray, b: jnp.ndarray, fmt_id,
     def step(i, y):
         row = jnp.take(LU, i, axis=0)
         prods = chop(row * y, fmt_id)
-        s = jnp.sum(jnp.where(idx < i, prods, jnp.zeros((), b.dtype)))
+        s = tree_sum(jnp.where(idx < i, prods, jnp.zeros((), b.dtype)))
         yi = chop(b[i] - s, fmt_id)
         return y.at[i].set(yi)
 
@@ -76,7 +76,7 @@ def solve_upper(LU: jnp.ndarray, y: jnp.ndarray, fmt_id,
         i = n - 1 - j
         row = jnp.take(LU, i, axis=0)
         prods = chop(row * x, fmt_id)
-        s = jnp.sum(jnp.where(idx > i, prods, jnp.zeros((), y.dtype)))
+        s = tree_sum(jnp.where(idx > i, prods, jnp.zeros((), y.dtype)))
         diag = row[i]
         safe = jnp.where(diag == 0, jnp.ones((), y.dtype), diag)
         # Double rounding by design: stored numerator, then stored

@@ -11,11 +11,13 @@ key holding the work count fed to the Eq. 25 penalty), and
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.action_space import ActionSpace
+from repro.core.executor import resolve_executor
 from repro.core.features import PAPER_FEATURES, feature_vector
 from repro.core.rewards import reward as reward_fn
 from repro.core.task import Outcome, bucket_of
@@ -53,6 +55,19 @@ class LinearSystemTask:
     or None for the process default. It is resolved once here so every
     solve the engine/server funnels through this task hits the same
     compiled executable.
+
+    `executor` selects the solve executor the same way (DESIGN.md §7):
+    an instance, a registry name ("local", "sharded"), or None for the
+    process default. The executor owns device placement and chunk
+    granularity; the engine and micro-batcher read it off the task.
+
+    `tune_blocking=True` runs a one-off startup sweep per (bucket,
+    backend) over blocked-LU panel widths and pins the winner into that
+    bucket's solver config (`solvers.block_autotune`) — the same
+    measure-then-commit move the bandit makes for precisions, applied
+    to the kernel-blocking knob. Off by default: the tuned policy is a
+    legitimate config change (panel-restricted pivoting differs by
+    width), so opting in is a per-task decision.
     """
 
     name = "linear-system"
@@ -61,14 +76,17 @@ class LinearSystemTask:
     def __init__(self, systems: Sequence[LinearSystem] = (),
                  action_space: Optional[ActionSpace] = None,
                  bucket_step: int = 128, min_bucket: int = 128,
-                 backend=None):
+                 backend=None, executor=None, tune_blocking: bool = False):
         self.instances: List[LinearSystem] = list(systems)
         self.action_space = action_space
         self.bucket_step = bucket_step
         self.min_bucket = min_bucket
         self.backend = resolve_backend(backend)
+        self.executor = resolve_executor(executor)
+        self.tune_blocking = tune_blocking
         self._features: Optional[np.ndarray] = None
         self._kappas: Optional[np.ndarray] = None
+        self._tuned_cfgs: dict = {}
 
     # -- context features --------------------------------------------------
     @property
@@ -99,6 +117,23 @@ class LinearSystemTask:
         return pad_system(system, self.bucket_key(system))
 
     # -- solving / reward --------------------------------------------------
+    def solver_cfg_for(self, cfg, n_pad: int):
+        """Per-bucket solver config: the static config, with the
+        blocked-LU panel width swapped for the startup-sweep winner when
+        `tune_blocking` is on. Cached per (config type, bucket), so each
+        bucket still compiles exactly one executable."""
+        if not self.tune_blocking:
+            return cfg
+        key = (type(cfg).__name__, int(n_pad))
+        if key not in self._tuned_cfgs:
+            from repro.solvers.block_autotune import tuned_blocking
+            pol = tuned_blocking(n_pad, backend=self.backend,
+                                 base=cfg.blocking)
+            self._tuned_cfgs[key] = (
+                cfg if pol == cfg.blocking
+                else dataclasses.replace(cfg, blocking=pol))
+        return self._tuned_cfgs[key]
+
     def solve_rows(self, rows, action_rows, chunk: int) -> List[Outcome]:
         raise NotImplementedError
 

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence
 
-import jax.numpy as jnp
+import jax
 import numpy as np
 
 from repro.core.action_space import ActionSpace
@@ -32,23 +32,25 @@ class CGIRTask(LinearSystemTask):
                  action_space: Optional[ActionSpace] = None,
                  cg_cfg: CGConfig = CGConfig(),
                  bucket_step: int = 128, min_bucket: int = 128,
-                 backend=None):
+                 backend=None, executor=None, tune_blocking: bool = False):
         super().__init__(systems, action_space, bucket_step, min_bucket,
-                         backend=backend)
+                         backend=backend, executor=executor,
+                         tune_blocking=tune_blocking)
         self.cg_cfg = cg_cfg
 
     def solve_rows(self, rows, action_rows: Sequence[np.ndarray],
                    chunk: int) -> List[Outcome]:
-        A, b, x, acts, k = stack_fixed(rows, action_rows, chunk)
-        stats = cg_ir_batch(jnp.asarray(A), jnp.asarray(b), jnp.asarray(x),
-                            jnp.asarray(acts, jnp.int32), self.cg_cfg,
-                            backend=self.backend)
-        ferr = np.asarray(stats.ferr)
-        nbe = np.asarray(stats.nbe)
-        n_outer = np.asarray(stats.n_outer)
-        n_cg = np.asarray(stats.n_cg)
-        status = np.asarray(stats.status)
-        res = np.asarray(stats.res_norm)
+        A, b, x, acts, k = stack_fixed(rows, action_rows,
+                                       self.executor.preferred_chunk(chunk))
+        cfg = self.solver_cfg_for(self.cg_cfg, A.shape[-1])
+        stats = self.executor.dispatch(
+            lambda Ai, bi, xi, ai: cg_ir_batch(Ai, bi, xi, ai, cfg,
+                                               backend=self.backend),
+            (A, b, x, acts), A.shape[-1],
+            key=(cg_ir_batch, cfg, self.backend))
+        # One host transfer for the whole stats tuple (DESIGN.md §7).
+        ferr, nbe, n_outer, n_cg, status, res = (
+            np.asarray(f) for f in jax.device_get(tuple(stats)))
         return [Outcome(status=int(status[j]), cost=float(n_cg[j]),
                         metrics={"ferr": float(ferr[j]),
                                  "nbe": float(nbe[j]),

@@ -43,14 +43,17 @@ class GMRESIRTask(LinearSystemTask):
                  action_space: Optional[ActionSpace] = None,
                  ir_cfg: IRConfig = IRConfig(),
                  bucket_step: int = 128, min_bucket: int = 128,
-                 backend=None):
+                 backend=None, executor=None, tune_blocking: bool = False):
         super().__init__(systems, action_space, bucket_step, min_bucket,
-                         backend=backend)
+                         backend=backend, executor=executor,
+                         tune_blocking=tune_blocking)
         self.ir_cfg = ir_cfg
 
     def solve_rows(self, rows, action_rows: Sequence[np.ndarray],
                    chunk: int) -> List[Outcome]:
+        cfg = self.solver_cfg_for(self.ir_cfg, rows[0][0].shape[-1])
         recs = solve_fixed_batch([r[0] for r in rows], [r[1] for r in rows],
                                  [r[2] for r in rows], action_rows,
-                                 self.ir_cfg, chunk, backend=self.backend)
+                                 cfg, chunk, backend=self.backend,
+                                 executor=self.executor)
         return [outcome_of_record(r) for r in recs]

@@ -214,3 +214,54 @@ def test_qtable_save_load(tmp_path):
     np.testing.assert_array_equal(qt.Q, qt2.Q)
     np.testing.assert_array_equal(qt.N, qt2.N)
     assert qt2.alpha == 0.5
+
+
+# ---------------------------------------------------------------------------
+# fp8-extended action space (SOLVER_LADDER_FP8)
+# ---------------------------------------------------------------------------
+
+def test_fp8_reduced_action_space():
+    from repro.core import fp8_reduced_action_space
+    from repro.precision import SOLVER_LADDER_FP8
+    space = fp8_reduced_action_space()
+    assert tuple(space.ladder) == tuple(SOLVER_LADDER_FP8)
+    assert space.n_actions == reduced_size(6, 4) == 126
+    # Eq. 11 ordering holds across the fp8 rungs too.
+    for a in range(space.n_actions):
+        bits = space.significand_bits(a)
+        assert list(bits) == sorted(bits)
+    assert space.names(0) == ("e5m2",) * 4            # cheapest extreme
+    assert space.names(space.n_actions - 1) == ("fp64",) * 4
+    # fp8 ids resolve to the saturating formats (what makes u_f = fp8
+    # fail soft on overflow instead of poisoning the LU with infs).
+    assert FORMATS["e4m3"].saturate and FORMATS["e5m2"].saturate
+    assert space.actions[0][0] == FORMAT_ID["e5m2"]
+
+
+def test_fp8_subsample_keeps_extremes():
+    from repro.core import fp8_reduced_action_space
+    space = fp8_reduced_action_space(subsample=40, seed=0)
+    assert space.n_actions == 40
+    assert space.names(0) == ("e5m2",) * 4
+    assert space.names(space.n_actions - 1) == ("fp64",) * 4
+
+
+def test_fp8_actions_solve_end_to_end():
+    """An all-e4m3 factorization action must run through GMRES-IR
+    without recompiling or crashing — saturation keeps the factors
+    finite, and failure (if any) flows through the status path."""
+    import jax.numpy as jnp
+    from repro.core import fp8_reduced_action_space
+    from repro.data.matrices import randsvd_dense
+    from repro.solvers import IRConfig, gmres_ir
+    space = fp8_reduced_action_space()
+    s = randsvd_dense(12, 10.0, np.random.default_rng(0))
+    # action 0 = all-e5m2, plus a mixed arm with fp8 factorization only.
+    mixed = np.asarray([FORMAT_ID["e4m3"], FORMAT_ID["fp32"],
+                        FORMAT_ID["fp32"], FORMAT_ID["fp64"]], np.int32)
+    for act in (space.actions[0], mixed):
+        st = gmres_ir(jnp.asarray(s.A), jnp.asarray(s.b),
+                      jnp.asarray(s.x_true), jnp.asarray(act, jnp.int32),
+                      IRConfig(tau=1e-6, i_max=4, m_max=12))
+        assert int(st.status) in (CONVERGED, 1, 2, FAILED)
+        assert np.isfinite(float(st.res_norm)) or int(st.status) == FAILED

@@ -272,3 +272,50 @@ def test_solve_upper_double_rounding_pinned():
     want_last = chop(chop(b_n[-1:], BF16) / Lu_n[-1, -1], BF16)
     np.testing.assert_array_equal(np.asarray(blocked)[-1:],
                                   np.asarray(want_last))
+
+
+# ---------------------------------------------------------------------------
+# Blocked-LU panel-width autotune (solvers/block_autotune)
+# ---------------------------------------------------------------------------
+
+def test_panel_autotune_picks_measured_candidate():
+    from repro.solvers import BlockingPolicy, tuned_blocking
+    from repro.solvers.block_autotune import sweep_lu_block
+    base = BlockingPolicy(min_n=32, lu_block=16, trisolve_block=16)
+    times = sweep_lu_block(64, candidates=(16, 32), trisolve_block=16,
+                           repeats=1)
+    assert set(times) == {16, 32}
+    assert all(t > 0 for t in times.values())
+    pol = tuned_blocking(64, base=base, candidates=(16, 32))
+    assert pol.lu_block in (16, 32)
+    assert pol.min_n == base.min_n and pol.trisolve_block == 16
+    # Cached: the second lookup returns the identical committed policy.
+    assert tuned_blocking(64, base=base, candidates=(16, 32)) is pol
+
+
+def test_panel_autotune_skips_below_threshold_and_disabled():
+    from repro.solvers import BlockingPolicy, STRICT_ONLY, tuned_blocking
+    base = BlockingPolicy(min_n=256)
+    assert tuned_blocking(64, base=base) == base        # strict path: no sweep
+    assert tuned_blocking(512, base=STRICT_ONLY) == STRICT_ONLY
+
+
+def test_task_opt_in_tunes_per_bucket():
+    from repro.core import reduced_action_space
+    from repro.data.matrices import randsvd_dense
+    from repro.solvers import BlockingPolicy, IRConfig
+    from repro.tasks import GMRESIRTask
+    base = BlockingPolicy(min_n=32, lu_block=16, trisolve_block=16)
+    cfg = IRConfig(tau=1e-6, i_max=3, m_max=8, blocking=base)
+    space = reduced_action_space()
+    systems = [randsvd_dense(30, 10.0, np.random.default_rng(3))]
+    task = GMRESIRTask(systems, space, cfg, bucket_step=32, min_bucket=32,
+                       tune_blocking=True)
+    tuned = task.solver_cfg_for(cfg, 32)
+    assert tuned.blocking.lu_block in (16, 32)          # <= bucket candidates
+    # One tuned config per (cfg type, bucket): the jit key stays stable.
+    assert task.solver_cfg_for(cfg, 32) is tuned
+    # The tuned config actually drives the solve path.
+    recs = task.solve_rows([task.prepare(systems[0])],
+                           [space.actions[-1]], 2)
+    assert len(recs) == 1 and recs[0].ok
