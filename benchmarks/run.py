@@ -55,11 +55,24 @@ def _flush(rows):
 
 def write_bench_results(path: str = BENCH_RESULTS_PATH) -> dict:
     """Aggregate headline numbers from the per-section reports into one
-    top-level JSON (req/s, p50/p99, solves/s per task)."""
+    top-level JSON (req/s, p50/p99, solves/s per task).
+
+    Merges into the existing file: a section is only rewritten when its
+    per-section report is present in benchmarks/results/, so re-running
+    one section never erases the others' committed trajectory."""
     from benchmarks.common import load_report
-    summary = {"service": None, "tasks": {},
-               "metadata": {"jax_device_count": jax.device_count(),
-                            "jax_backend": jax.default_backend()}}
+    summary = {"service": None, "tasks": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                summary.update(json.load(f))
+        except (OSError, json.JSONDecodeError):
+            pass
+    summary["metadata"] = {"jax_device_count": jax.device_count(),
+                           "jax_backend": jax.default_backend(),
+                           **summary.get("metadata", {})}
+    summary["metadata"]["jax_device_count"] = jax.device_count()
+    summary["metadata"]["jax_backend"] = jax.default_backend()
     service = load_report("service_bench")
     if service:
         summary["service"] = [
@@ -69,6 +82,9 @@ def write_bench_results(path: str = BENCH_RESULTS_PATH) -> dict:
              "p99_s": s["latency_s"]["p99"],
              "pad_waste_frac": s.get("pad_waste_frac")}
             for s in service.get("settings", [])]
+        if service.get("obs_overhead"):
+            # Metrics-on vs metrics-off req/s (acceptance bar: <= 5%).
+            summary["service_obs_overhead"] = service["obs_overhead"]
     tasks = load_report("task_bench")
     if tasks:
         summary["tasks"] = {

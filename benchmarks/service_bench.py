@@ -6,6 +6,11 @@ per-request latency for each. Per-bucket executables are warmed up (one
 full batch per bucket) before timing so the numbers measure steady-state
 serving, not XLA compilation.
 
+An extra arm re-runs one batch size with observability fully off
+(`obs=False`) vs fully on (metrics + tracer + trajectory log) and
+records the req/s overhead — the fail-open layer's <= 5% acceptance
+bar (DESIGN.md §8) — under ``obs_overhead`` in the report.
+
 CSV rows follow the `benchmarks/run.py` contract (name,us_per_call,derived)
 and the full report lands in benchmarks/results/service_bench.json.
 
@@ -32,6 +37,7 @@ from benchmarks.common import (W1, get_scale, load_report, save_report)
 from repro.core import (GMRESIREnv, TrainConfig, bucket_of,
                         reduced_action_space)
 from repro.data import generate_dense_set, generate_sparse_set
+from repro.obs import MetricsRegistry, Observability
 from repro.service import (AutotuneServer, BatcherConfig, OnlineConfig,
                            PolicyRegistry)
 from repro.solvers import IRConfig
@@ -51,12 +57,16 @@ def _trace(n_requests: int, n_range, seed: int):
 
 
 def bench_setting(registry_root, trace, max_batch: int, ir_cfg,
-                  bucket_step: int) -> dict:
+                  bucket_step: int, obs=None) -> dict:
+    """One timed streaming pass. `obs` is forwarded to the server:
+    None = the production default (process-default metrics registry),
+    False = observability disabled, or an explicit `Observability`
+    bundle (the metrics-on arm of the overhead comparison)."""
     srv = AutotuneServer(
         PolicyRegistry(registry_root), ir_cfg, W1,
         BatcherConfig(max_batch=max_batch, max_wait_s=0.02,
                       bucket_step=bucket_step, min_bucket=bucket_step),
-        OnlineConfig())
+        OnlineConfig(), obs=obs)
     # Warm-up: compile each bucket's executable outside the timed window.
     buckets = {}
     for s in trace:
@@ -127,6 +137,25 @@ def run(full: bool = False, recompute: bool = False,
               "settings": [bench_setting(root, trace, mb, ir_cfg,
                                          bucket_step)
                            for mb in batches]}
+    # Observability overhead: the same trace through one batch size with
+    # the layer fully off vs fully on (isolated registry + tracer + the
+    # JSONL trajectory log — the most expensive configuration). The
+    # acceptance bar is <= 5% req/s; BENCH_results.json records it.
+    mb = 4 if 4 in batches else batches[-1]
+    off = bench_setting(root, trace, mb, ir_cfg, bucket_step, obs=False)
+    with tempfile.TemporaryDirectory() as td:
+        bundle = Observability(
+            registry=MetricsRegistry(),
+            trajectory_path=os.path.join(td, "trajectory.jsonl"))
+        on = bench_setting(root, trace, mb, ir_cfg, bucket_step,
+                           obs=bundle)
+        bundle.close()
+    report["obs_overhead"] = {
+        "max_batch": mb,
+        "rps_off": off["rps"],
+        "rps_on": on["rps"],
+        "overhead_pct": 100.0 * (1.0 - on["rps"] / off["rps"]),
+    }
     save_report("service_bench", report)
     if root_ctx is not None:
         root_ctx.cleanup()
@@ -141,6 +170,13 @@ def emit_rows(report: dict) -> list:
                    f"p99={s['latency_s']['p99']:.4f};"
                    f"pad_waste={s['pad_waste_frac']:.3f}")
         rows.append(f"service/b{s['max_batch']},{us:.0f},{derived}")
+    ov = report.get("obs_overhead")
+    if ov:
+        us = 1e6 / max(ov["rps_on"], 1e-9)
+        rows.append(
+            f"service/obs_overhead_b{ov['max_batch']},{us:.0f},"
+            f"rps_on={ov['rps_on']:.2f};rps_off={ov['rps_off']:.2f};"
+            f"overhead_pct={ov['overhead_pct']:.2f}")
     return rows
 
 

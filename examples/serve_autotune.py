@@ -6,7 +6,9 @@
    learning online from every observed reward.
 4. Shift the distribution to ill-conditioned sparse systems mid-stream —
    watch the |RPE| drift detector trigger re-exploration.
-5. Snapshot the adapted policy, then demonstrate rollback.
+5. Scrape the live observability front door (`/metrics`, `/readyz`)
+   and inspect the JSONL trajectory log it wrote along the way.
+6. Snapshot the adapted policy, then demonstrate rollback.
 
     PYTHONPATH=src python examples/serve_autotune.py
 """
@@ -14,12 +16,15 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
+import os
 import tempfile
+import urllib.request
 
 import numpy as np
 
 from repro.core import GMRESIREnv, TrainConfig, W1, reduced_action_space
 from repro.data import generate_dense_set, generate_sparse_set
+from repro.obs import Observability
 from repro.service import (AutotuneServer, BatcherConfig, OnlineConfig,
                            PolicyRegistry)
 from repro.solvers import IRConfig
@@ -56,13 +61,19 @@ def main():
         print(f"  promoted {version}: {reg.meta(version)['note']}")
 
         print("== 3. serve a dense stream ==")
+        obs = Observability(
+            trajectory_path=os.path.join(root, "trajectory.jsonl"))
         server = AutotuneServer(
             reg, ir_cfg, W1,
             BatcherConfig(max_batch=8, max_wait_s=0.02, bucket_step=64,
                           min_bucket=64),
             # Demo-scale drift windows: only non-exploratory visits to known
             # states feed the detector, and this stream is only 64 requests.
-            OnlineConfig(warmup_updates=6, cooldown_updates=16))
+            OnlineConfig(warmup_updates=6, cooldown_updates=16),
+            obs=obs)
+        http = server.serve_obs()
+        print(f"  observability at {http.url}  "
+              "(/metrics /healthz /readyz /telemetry /trace)")
         dense = generate_dense_set(32, rng, n_range=(40, 120),
                                    log10_kappa_range=(1, 6))
         stream(server, dense, "dense")
@@ -77,7 +88,20 @@ def main():
               f"p50 latency {tel['latency_s']['p50'] * 1e3:.1f} ms, "
               f"pad waste {tel['pad_waste_frac']:.1%}")
 
-        print("== 5. snapshot + rollback ==")
+        print("== 5. scrape the front door ==")
+        with urllib.request.urlopen(http.url + "/readyz") as r:
+            print(f"  GET /readyz -> {r.status} {r.read().decode().strip()}")
+        with urllib.request.urlopen(http.url + "/metrics") as r:
+            scrape = r.read().decode()
+        for line in scrape.splitlines():
+            if line.startswith(("repro_service_responses_total",
+                                "repro_online_drift_events_total",
+                                "repro_obs_errors_total")):
+                print(f"  {line}")
+        print(f"  trajectory log: {obs.trajlog.written} records "
+              f"at {obs.trajlog.path}")
+
+        print("== 6. snapshot + rollback ==")
         v2 = server.snapshot(note="adapted to sparse shift")
         print(f"  promoted {v2} (current={reg.current_version()})")
         prev = reg.rollback()

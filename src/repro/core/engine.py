@@ -31,6 +31,20 @@ from repro.core.policy import PrecisionPolicy
 from repro.core.task import Outcome, TunableTask
 
 
+def _count(name: str, help: str, amount: float = 1.0, **labels) -> None:
+    """Fail-open counter against the process-default metrics registry
+    (repro.obs). The engine predates any server's obs bundle, and the
+    solve-cache stats are process-global anyway — like the executor's
+    wrapped-callable memo they describe compiled state, not one server."""
+    try:
+        from repro.obs.metrics import default_registry
+        fam = default_registry().counter(name, help,
+                                         tuple(sorted(labels)))
+        (fam.labels(**labels) if labels else fam).inc(amount)
+    except Exception:
+        pass
+
+
 class AutotuneEngine:
     def __init__(self, task: TunableTask, reward_cfg=None,
                  chunk: int = 32, seed: int = 0,
@@ -89,15 +103,21 @@ class AutotuneEngine:
                        if (int(i), int(a)) not in self._cache})
         if not miss:
             return
+        pad_before = self.n_pad_solves
         by_bucket: Dict[int, List[Tuple[int, int]]] = {}
         for p in miss:
             key = self.task.bucket_key(self.task.instances[p[0]])
             by_bucket.setdefault(key, []).append(p)
+        task_name = getattr(self.task, "name", "unknown")
         for bucket, plist in sorted(by_bucket.items()):
             # Executor granularity: a mesh executor rounds the chunk up
             # to a multiple of its data-axis width, and the pad-row
             # stats must count those extra rows — they run on devices.
             chunk = self.executor.preferred_chunk(self.chunk, bucket)
+            _count("repro_engine_cache_misses_total",
+                   "Uncached (instance, action) pairs solved by the "
+                   "engine's solve cache.", len(plist),
+                   task=task_name, bucket=bucket)
             for c0 in range(0, len(plist), chunk):
                 chunk_pairs = plist[c0:c0 + chunk]
                 outs = self.task.solve_rows(
@@ -108,6 +128,12 @@ class AutotuneEngine:
                 self.n_pad_solves += chunk - len(chunk_pairs)
                 for p, out in zip(chunk_pairs, outs):
                     self._cache[p] = out
+        _count("repro_engine_solve_rows_total",
+               "Real rows solved through the engine cache.", len(miss),
+               task=task_name)
+        _count("repro_engine_pad_rows_total",
+               "Padding rows burned by fixed-chunk engine solves.",
+               self.n_pad_solves - pad_before, task=task_name)
 
     def outcome(self, i: int, a: int) -> Outcome:
         if (i, a) not in self._cache:

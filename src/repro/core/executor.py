@@ -283,6 +283,18 @@ def batch_callable(executor: "SolveExecutor", key,
     k = (executor, key)
     if k not in _WRAPPED:
         _WRAPPED[k] = executor.wrap(solve_fn)
+        # A memo miss is the compile-cache-miss signal: each wrapper is
+        # one new executable per (executor, computation key). Fail-open
+        # against the process-default metrics registry (DESIGN.md §8).
+        try:
+            from repro.obs.metrics import default_registry
+            default_registry().counter(
+                "repro_executor_wrap_builds_total",
+                "Wrapped batch callables built — one new compiled "
+                "executable per (executor, computation key).",
+                ("executor",)).labels(executor=executor.name).inc()
+        except Exception:
+            pass
     return _WRAPPED[k]
 
 

@@ -1,0 +1,88 @@
+"""Append-only JSONL trajectory log of every served decision.
+
+One line per completed request, carrying everything off-policy
+evaluation of a candidate policy needs later (ROADMAP "Beyond
+ε-greedy"; Khodak et al. amortize over exactly such logged sequences of
+related instances): the context features and discretized state, the
+action taken, the epsilon in force and whether the epsilon coin fired
+(the behavior-policy propensity is reconstructible from ``eps``,
+``explore`` and the action-space size), the observed reward and outcome
+metrics, and the policy version that made the decision.
+
+The writer is line-buffered append-only — a crashed server loses at
+most the final partial line, and `read()` skips partial/corrupt lines
+rather than failing, so a log being written is safely readable. All
+server-side writes go through the fail-open guard (DESIGN.md §8.1): a
+full disk or closed file never breaks the solve path.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from typing import Iterator, List, Optional
+
+
+def _jsonable(v):
+    """Best-effort JSON coercion (numpy scalars -> float, else str)."""
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return str(v)
+
+
+class TrajectoryLog:
+    """Append-only JSONL writer + reader for served trajectories."""
+
+    # The stable schema off-policy evaluation depends on; extra keys are
+    # allowed, these are required of server-written records (pinned by
+    # tests/test_obs.py).
+    FIELDS = ("ts", "request_id", "task", "bucket", "features", "state",
+              "action", "action_names", "eps", "explore", "reward",
+              "outcome", "latency_s", "policy_version", "drift")
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._lock = threading.Lock()
+        self._fh = open(self.path, "a", buffering=1)   # line-buffered
+        self.written = 0
+
+    def append(self, record: dict) -> None:
+        line = json.dumps(record, default=_jsonable,
+                          separators=(",", ":"))
+        with self._lock:
+            self._fh.write(line + "\n")
+            self.written += 1
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._fh.closed:
+                self._fh.close()
+
+    def __enter__(self) -> "TrajectoryLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- reading -----------------------------------------------------------
+    @staticmethod
+    def iter_records(path: str) -> Iterator[dict]:
+        """Yield records, skipping blank/partial trailing lines."""
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    yield json.loads(line)
+                except json.JSONDecodeError:
+                    continue          # torn tail write of a live log
+
+    @classmethod
+    def read(cls, path: str,
+             task: Optional[str] = None) -> List[dict]:
+        """All records (optionally filtered to one task name)."""
+        recs = list(cls.iter_records(path))
+        if task is not None:
+            recs = [r for r in recs if r.get("task") == task]
+        return recs

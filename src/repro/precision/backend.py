@@ -221,6 +221,18 @@ def _from_name(name: str) -> PrecisionBackend:
             and jax.default_backend() != "tpu"):
         # Fast path requested without TPU hardware: interpret mode would
         # be orders of magnitude slower than jnp, so serve jnp instead.
+        # The silent downgrade is exactly what a dashboard must see, so
+        # count it (fail-open) in the default metrics registry.
+        try:
+            from repro.obs.metrics import default_registry
+            default_registry().counter(
+                "repro_backend_fallbacks_total",
+                "Precision-backend downgrades (requested backend "
+                "unavailable on this host).",
+                ("requested", "served")).labels(
+                    requested="pallas", served="jnp").inc()
+        except Exception:
+            pass
         if not _WARNED_FALLBACK:
             warnings.warn(
                 "precision backend 'pallas' requested off-TPU; falling "

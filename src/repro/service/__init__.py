@@ -9,7 +9,9 @@ EWMA-|RPE| drift detection, and versioned policy snapshots with atomic
 promote/rollback. All algorithm-specific behavior flows through the
 task's `TunableTask` hooks; the server and batcher import no solver.
 """
+from repro.obs import Observability
 from .batcher import BatcherConfig, FlushResult, MicroBatcher
+from .instrument import LearnerInstruments, ServiceInstruments
 from .online import (DriftDetector, EpsilonController, OnlineConfig,
                      OnlineLearner, OnlineUpdate)
 from .registry import PolicyRegistry
@@ -18,6 +20,7 @@ from .telemetry import Ewma, Telemetry
 
 __all__ = [
     "AutotuneServer", "BatcherConfig", "DriftDetector", "EpsilonController",
-    "Ewma", "FlushResult", "MicroBatcher", "OnlineConfig", "OnlineLearner",
-    "OnlineUpdate", "PolicyRegistry", "SolveResponse", "Telemetry",
+    "Ewma", "FlushResult", "LearnerInstruments", "MicroBatcher",
+    "Observability", "OnlineConfig", "OnlineLearner", "OnlineUpdate",
+    "PolicyRegistry", "ServiceInstruments", "SolveResponse", "Telemetry",
 ]

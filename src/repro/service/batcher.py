@@ -60,6 +60,13 @@ class FlushResult:
     req_ids: List[int]
     records: List[Outcome]
     n_rows: int                 # rows solved (== flush target, incl. padding)
+    # Observability stamps (server clock): the tracer turns these into
+    # per-request queue_wait / solve spans, and `solve_s` (real wall
+    # seconds, independent of an injected test clock) feeds the
+    # repro_service_solve_batch_seconds histogram.
+    t_solve_start: float = 0.0
+    t_solve_end: float = 0.0
+    solve_s: float = 0.0
 
 
 class MicroBatcher:
@@ -104,11 +111,14 @@ class MicroBatcher:
     def _flush_bucket(self, bucket: int, entries: List[_Pending]
                       ) -> FlushResult:
         target = self.flush_target(bucket)
+        t0, w0 = self.clock(), time.perf_counter()
         records = self.task.solve_rows(
             [e.rows for e in entries], [e.action_row for e in entries],
             target)
         return FlushResult(bucket, [e.req_id for e in entries], records,
-                           target)
+                           target, t_solve_start=t0,
+                           t_solve_end=self.clock(),
+                           solve_s=time.perf_counter() - w0)
 
     def pump(self, force: bool = False) -> List[FlushResult]:
         """Flush every due bucket; with force=True, flush everything."""

@@ -125,13 +125,22 @@ class OnlineLearner:
 
     Accepts the live `QTable` directly, or anything exposing one via a
     `.qtable` attribute (an `AutotuneEngine` or `PrecisionPolicy`), so
-    the server can hand it the shared engine."""
+    the server can hand it the shared engine.
 
-    def __init__(self, qtable, cfg: OnlineConfig = OnlineConfig()):
+    `obs` (an `repro.obs.Observability`) exports the live epsilon gauge
+    and drift/update counters; the hook is fail-open (DESIGN.md §8.1)
+    and optional, so offline/test users pay nothing."""
+
+    def __init__(self, qtable, cfg: OnlineConfig = OnlineConfig(),
+                 obs=None):
         self.qtable: QTable = getattr(qtable, "qtable", qtable)
         self.cfg = cfg
         self.epsilon = EpsilonController(cfg)
         self.drift = DriftDetector(cfg)
+        self._instr = None
+        if obs is not None:
+            from repro.service.instrument import LearnerInstruments
+            self._instr = LearnerInstruments(obs)
 
     def select(self, state: int) -> int:
         return self.qtable.select(state, self.epsilon.value)
@@ -154,4 +163,7 @@ class OnlineLearner:
         if drifted:
             self.epsilon.boost()
         self.epsilon.step()
-        return OnlineUpdate(rpe, self.epsilon.value, drifted)
+        upd = OnlineUpdate(rpe, self.epsilon.value, drifted)
+        if self._instr is not None:
+            self._instr.on_update(upd)
+        return upd

@@ -25,6 +25,17 @@ from repro.core.policy import PrecisionPolicy
 from repro.core.rewards import RewardConfig
 
 
+def _count(name: str, help: str) -> None:
+    """Fail-open lifecycle counter against the process-default metrics
+    registry (a PolicyRegistry predates any server's obs bundle, and
+    promote/rollback are exactly the events a canary dashboard needs)."""
+    try:
+        from repro.obs.metrics import default_registry
+        default_registry().counter(name, help).inc()
+    except Exception:
+        pass
+
+
 class PolicyRegistry:
     def __init__(self, root: str):
         self.root = root
@@ -85,6 +96,8 @@ class PolicyRegistry:
         meta.update(extra_meta or {})
         with open(os.path.join(vdir, "meta.json"), "w") as f:
             json.dump(meta, f, indent=1)
+        _count("repro_registry_publishes_total",
+               "Policy snapshots published (not yet live).")
         return version
 
     def promote(self, version: str) -> None:
@@ -102,6 +115,8 @@ class PolicyRegistry:
             raise
         with open(self._history_path, "a") as f:
             f.write(version + "\n")
+        _count("repro_registry_promotes_total",
+               "CURRENT-pointer flips (snapshot promotions).")
 
     def rollback(self) -> str:
         """Re-promote the version that was live before the current one.
@@ -118,6 +133,8 @@ class PolicyRegistry:
         if not prior:
             raise RuntimeError("no earlier version to roll back to")
         self.promote(prior[-1])
+        _count("repro_registry_rollbacks_total",
+               "Rollbacks to an earlier promoted version.")
         return prior[-1]
 
     # -- loading -----------------------------------------------------------

@@ -20,6 +20,13 @@ user task is hosted identically (legacy solver configs are adapted via
 promoted registry snapshot, so the snapshot stays immutable;
 `snapshot()` publishes the live state back as a new version (and
 promotes it) — crash recovery is just "reload CURRENT".
+
+Every lifecycle event is mirrored into the fail-open observability
+layer (`repro.obs`, DESIGN.md §8) through `ServiceInstruments`:
+metrics, per-request trace spans, and the JSONL trajectory log. A
+fault anywhere in that layer is swallowed and counted, never surfaced
+to a caller of `submit()`/`step()`; `serve_obs()` opens the HTTP
+front door (`/metrics`, `/healthz`, `/readyz`).
 """
 from __future__ import annotations
 
@@ -35,7 +42,9 @@ from repro.core.executor import resolve_executor
 from repro.core.policy import PrecisionPolicy
 from repro.core.rewards import RewardConfig
 from repro.core.task import Outcome, coerce_task
+from repro.obs import Observability
 from repro.service.batcher import BatcherConfig, MicroBatcher
+from repro.service.instrument import ServiceInstruments
 from repro.service.online import OnlineConfig, OnlineLearner
 from repro.service.registry import PolicyRegistry
 from repro.service.telemetry import Telemetry
@@ -65,6 +74,8 @@ class _InFlight:
     explore: bool               # epsilon coin fired (random action)
     submitted_at: float
     bucket: int
+    features: object = None     # context vector (trajectory log)
+    t_accept: float = 0.0       # submit() entry (trace: selection span)
 
 
 def _live_qtable(snapshot: QTable, alpha, seed: int) -> QTable:
@@ -84,7 +95,8 @@ class AutotuneServer:
                  clock: Callable[[], float] = time.monotonic,
                  seed: int = 0,
                  max_retained_responses: int = 65536,
-                 executor=None):
+                 executor=None,
+                 obs: Union[None, bool, Observability] = None):
         if isinstance(registry, PolicyRegistry):
             self.registry: Optional[PolicyRegistry] = registry
             snapshot = registry.load()
@@ -121,13 +133,28 @@ class AutotuneServer:
         self.live = PrecisionPolicy(
             snapshot.action_space, snapshot.discretizer,
             _live_qtable(snapshot.qtable, online_cfg.alpha, seed))
+        # Observability is on by default (fail-open, DESIGN.md §8):
+        # None/True joins the process-default metrics registry; an
+        # explicit `Observability` isolates/extends (trajectory log,
+        # private registry); False disables the whole layer (the
+        # metrics-off arm of benchmarks/service_bench.py).
+        if obs is False:
+            self.obs: Optional[Observability] = None
+        elif obs is None or obs is True:
+            self.obs = Observability()
+        else:
+            self.obs = obs
         self.engine = AutotuneEngine(self.task, reward_cfg,
                                      policy=self.live, seed=seed)
-        self.learner = OnlineLearner(self.engine, online_cfg)
+        self.learner = OnlineLearner(self.engine, online_cfg,
+                                     obs=self.obs)
         self.reward_cfg = reward_cfg
         self.clock = clock
         self.batcher = MicroBatcher(self.task, batcher_cfg, clock)
         self.telemetry = Telemetry()
+        self._instr = (ServiceInstruments(
+            self.obs, getattr(self.task, "name", "unknown"),
+            self.executor.name) if self.obs is not None else None)
         self._inflight: Dict[int, _InFlight] = {}
         # Bounded retention for poll(): oldest un-polled responses are
         # evicted past the cap, so push-style consumers that never poll
@@ -147,13 +174,19 @@ class AutotuneServer:
         return state, action, eps, explore
 
     def submit(self, instance) -> int:
+        t_accept = self.clock()
         feats = self.task.feature_of(instance)
         state, action, eps, explore = self.select_action(feats)
         req_id, bucket = self.batcher.submit(
             instance, self.action_space.actions[action])
+        now = self.clock()
         self._inflight[req_id] = _InFlight(instance, state, action, eps,
-                                           explore, self.clock(), bucket)
-        self.telemetry.on_submit(bucket)
+                                           explore, now, bucket,
+                                           features=feats,
+                                           t_accept=t_accept)
+        self.telemetry.on_submit(bucket, now)
+        if self._instr is not None:
+            self._instr.on_submit(bucket, action, explore, self.pending)
         self.step()          # flush any bucket this submit filled
         return req_id
 
@@ -163,8 +196,10 @@ class AutotuneServer:
         for flush in self.batcher.pump(force=force):
             self.telemetry.on_batch(flush.bucket, len(flush.req_ids),
                                     flush.n_rows)
+            if self._instr is not None:
+                self._instr.on_flush(flush, self.pending)
             for req_id, rec in zip(flush.req_ids, flush.records):
-                done.append(self._complete(req_id, rec))
+                done.append(self._complete(req_id, rec, flush))
         return done
 
     def drain(self) -> List[SolveResponse]:
@@ -180,12 +215,14 @@ class AutotuneServer:
         return self.batcher.pending
 
     # -- learn path --------------------------------------------------------
-    def _complete(self, req_id: int, rec: Outcome) -> SolveResponse:
+    def _complete(self, req_id: int, rec: Outcome,
+                  flush=None) -> SolveResponse:
         info = self._inflight.pop(req_id)
-        now = self.clock()
         r = self.engine.reward_for(rec, info.action, info.instance)
+        t_reward = self.clock()
         upd = self.learner.update(info.state, info.action, r,
                                   explore=info.explore)
+        now = self.clock()
         self.telemetry.on_update(abs(upd.rpe), upd.drift)
         resp = SolveResponse(
             request_id=req_id, action=info.action,
@@ -194,7 +231,11 @@ class AutotuneServer:
             policy_version=self.policy_version, bucket=info.bucket,
             latency_s=now - info.submitted_at, drift=upd.drift)
         self.telemetry.on_response(resp.latency_s, resp.action_names,
-                                   resp.action, r, now)
+                                   resp.action, r, now,
+                                   bucket=info.bucket)
+        if self._instr is not None:
+            self._instr.on_complete(resp, info, flush, self.telemetry,
+                                    t_reward, now)
         self._responses[req_id] = resp
         while len(self._responses) > self._max_retained:
             self._responses.pop(next(iter(self._responses)))
@@ -202,16 +243,59 @@ class AutotuneServer:
             self.on_response(resp)
         return resp
 
+    # -- observability front door ------------------------------------------
+    @property
+    def ready(self) -> bool:
+        """Readiness (the `/readyz` gate): a policy snapshot is loaded
+        and the bucket grid is warm — every bucket that has received
+        traffic has flushed (= compiled) at least one micro-batch, and
+        at least one batch has run. A server that has not solved
+        anything yet would serve its first requests through an XLA
+        compile, so it reports unready until warmed."""
+        if self.live is None:
+            return False
+        warmed = set(self.telemetry.batches_per_bucket)
+        seen = set(self.telemetry.requests_per_bucket)
+        return bool(warmed) and seen <= warmed
+
+    def serve_obs(self, host: str = "127.0.0.1", port: int = 0):
+        """Open the HTTP observability surface (`/metrics`, `/healthz`,
+        `/readyz`, `/telemetry`, `/trace`); returns the `ObsHTTPServer`
+        (read `.url`). The first externally visible face of the server."""
+        if self.obs is None:
+            raise RuntimeError("server was built with obs=False")
+        return self.obs.serve(host=host, port=port,
+                              ready_fn=lambda: self.ready,
+                              telemetry_fn=self.telemetry.snapshot)
+
     # -- snapshotting ------------------------------------------------------
     def snapshot(self, note: str = "online snapshot") -> str:
-        """Publish + promote the live policy as a new registry version."""
+        """Publish + promote the live policy as a new registry version.
+
+        The version's meta embeds the current telemetry evidence
+        (reward/|RPE| EWMAs, per-bucket p99, drift count) so every
+        promoted policy carries the numbers it was promoted on — the
+        gating inputs of the canary-promotion workstream."""
         if self.registry is None:
             raise RuntimeError("server was built without a registry")
+        tel = self.telemetry
         version = self.registry.publish(
             self.live, note=note,
             extra_meta={"task": getattr(self.task, "name", "unknown"),
-                        "online_updates": self.telemetry.updates,
-                        "drift_events": self.telemetry.drift_events})
+                        "online_updates": tel.updates,
+                        "drift_events": tel.drift_events,
+                        "telemetry": {
+                            "responses": tel.responses,
+                            "reward_ewma": tel.reward_ewma.value,
+                            "abs_rpe_ewma": tel.abs_rpe_ewma.value,
+                            "drift_events": tel.drift_events,
+                            "throughput_rps": tel.throughput_rps,
+                            "latency_s": tel.latency_percentiles(),
+                            "latency_s_per_bucket":
+                                tel.latency_percentiles_per_bucket(),
+                        }})
         self.registry.promote(version)
         self.policy_version = version
+        if self._instr is not None:
+            self._instr.on_snapshot(version)
         return version

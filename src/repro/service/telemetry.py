@@ -33,7 +33,8 @@ class Ewma:
 
 class Telemetry:
     def __init__(self, max_latency_samples: int = 4096,
-                 reward_coeff: float = 0.02):
+                 reward_coeff: float = 0.02,
+                 max_bucket_latency_samples: int = 1024):
         self.requests = 0
         self.responses = 0
         self.solver_batches = 0
@@ -49,13 +50,24 @@ class Telemetry:
         self.reward_sum = 0.0
         self.abs_rpe_ewma = Ewma(reward_coeff)
         self._latencies = deque(maxlen=max_latency_samples)
-        self._wall: Optional[tuple] = None        # (first_t, last_t)
+        # Per-bucket reservoirs: per-bucket p99 is the promotion gate the
+        # canary workstream needs, and one global reservoir cannot
+        # recover it (small buckets drown in big-bucket samples).
+        self._bucket_latency_cap = max_bucket_latency_samples
+        self._latencies_per_bucket: Dict[int, deque] = {}
+        # (first_submit_t, last_response_t): the wall-clock window is
+        # anchored at the FIRST SUBMIT, not the first response —
+        # anchoring at the first response made single-response and
+        # warmup-heavy runs report 0 or inflated rates.
+        self._wall: Optional[tuple] = None
 
     # -- recording ---------------------------------------------------------
-    def on_submit(self, bucket: int) -> None:
+    def on_submit(self, bucket: int, now: Optional[float] = None) -> None:
         self.requests += 1
         self.requests_per_bucket[bucket] = \
             self.requests_per_bucket.get(bucket, 0) + 1
+        if now is not None and self._wall is None:
+            self._wall = (now, now)
 
     def on_batch(self, bucket: int, n_live: int, n_rows: int) -> None:
         self.solver_batches += 1
@@ -65,9 +77,16 @@ class Telemetry:
             self.batches_per_bucket.get(bucket, 0) + 1
 
     def on_response(self, latency_s: float, action_names, action: int,
-                    reward: float, now: float) -> None:
+                    reward: float, now: float,
+                    bucket: Optional[int] = None) -> None:
         self.responses += 1
         self._latencies.append(float(latency_s))
+        if bucket is not None:
+            res = self._latencies_per_bucket.get(bucket)
+            if res is None:
+                res = self._latencies_per_bucket[bucket] = deque(
+                    maxlen=self._bucket_latency_cap)
+            res.append(float(latency_s))
         for name in action_names:
             self.usage[name] = self.usage.get(name, 0) + 1
         self.action_counts[int(action)] = \
@@ -92,11 +111,29 @@ class Telemetry:
         arr = np.asarray(self._latencies)
         return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
 
+    def latency_percentiles_per_bucket(self, qs=(50, 99)
+                                       ) -> Dict[int, Dict[str, float]]:
+        """Per-bucket percentiles over the bounded per-bucket reservoirs
+        (the canary promotion gate reads p99 from here)."""
+        out: Dict[int, Dict[str, float]] = {}
+        for bucket, res in sorted(self._latencies_per_bucket.items()):
+            arr = np.asarray(res)
+            out[bucket] = {f"p{q}": float(np.percentile(arr, q))
+                           for q in qs}
+        return out
+
     @property
     def throughput_rps(self) -> float:
+        """Responses per second over [first submit, last response].
+
+        The window opens at the first *submit* (when `on_submit` is
+        given a timestamp): a run that submits, waits, and receives one
+        response reports 1/window — the first-response anchor used to
+        make that 0, and made warmup-heavy runs look inflated because
+        all queue time before the first response was dropped."""
         if self._wall is None or self._wall[1] <= self._wall[0]:
             return 0.0
-        return (self.responses - 1) / (self._wall[1] - self._wall[0])
+        return self.responses / (self._wall[1] - self._wall[0])
 
     def snapshot(self) -> dict:
         total = max(self.responses, 1)
@@ -121,5 +158,6 @@ class Telemetry:
             "reward_mean": self.reward_sum / total,
             "abs_rpe_ewma": self.abs_rpe_ewma.value,
             "latency_s": self.latency_percentiles(),
+            "latency_s_per_bucket": self.latency_percentiles_per_bucket(),
             "throughput_rps": self.throughput_rps,
         }

@@ -1,0 +1,508 @@
+"""Observability layer: fail-open metrics, Prometheus exposition, the
+HTTP front door, request tracing, and the trajectory log.
+
+The load-bearing test here is the fault-injection one: a server whose
+sinks / tracer / trajectory log all raise must produce bit-identical
+responses to a server with observability disabled — instrumentation can
+never change a solve result or drop a response (DESIGN.md §8.1)."""
+import json
+import os
+import shutil
+import sys
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import GMRESIREnv, TrainConfig, W1, reduced_action_space
+from repro.obs import (MetricsRegistry, Observability, Tracer,
+                       TrajectoryLog, default_registry, fail_open,
+                       lint_exposition, render_json, render_prometheus)
+from repro.service import (AutotuneServer, BatcherConfig, OnlineConfig,
+                           PolicyRegistry, Telemetry)
+from repro.data import generate_dense_set
+from repro.solvers import IRConfig
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+SPACE = reduced_action_space()
+IR = IRConfig(tau=1e-6)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry: fail-open mutators, sinks, exposition
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_t_requests_total", "Requests.", ("task",))
+    c.labels(task="a").inc()
+    c.labels(task="a").inc(2)
+    c.labels(task="b").inc(0.5)
+    assert c.labels(task="a").value == pytest.approx(3.0)
+    assert c.labels(task="b").value == pytest.approx(0.5)
+
+    g = reg.gauge("repro_t_pending", "Pending.")
+    g.set(4)
+    g.inc()
+    g.dec(2)
+    assert g.labels().value == pytest.approx(3.0)
+
+    h = reg.histogram("repro_t_wait_seconds", "Wait.", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    child = h.labels()
+    assert child.count == 3
+    assert child.sum == pytest.approx(5.55)
+    assert child.cumulative() == [1, 2, 3]     # le=0.1, le=1, +Inf
+    assert reg.errors == 0
+
+    # Families are get-or-create: same name returns the same object...
+    assert reg.counter("repro_t_requests_total", "", ("task",)) is c
+    # ...but re-registering with different labels is a hard error (a
+    # programming bug, caught at construction, not on the hot path).
+    with pytest.raises(ValueError):
+        reg.counter("repro_t_requests_total", "", ("other",))
+
+
+def test_metric_mutators_are_fail_open():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_t_x_total", "X.")
+    c.inc(5)
+    c.inc(-1)                      # negative increment: rejected, counted
+    c.inc(float("nan"))            # non-finite: rejected, counted
+    assert c.labels().value == pytest.approx(5.0)
+    assert reg.errors == 2
+
+    g = reg.gauge("repro_t_g", "G.")
+    g.set("not-a-number")          # ValueError swallowed
+    assert g.labels().value == 0.0
+    assert reg.errors == 3
+
+    # Wrong label names raise *outside* the guard (facades reach labels()
+    # only through fail_open-wrapped methods).
+    with pytest.raises(ValueError):
+        reg.counter("repro_t_lab_total", "", ("task",)).labels(wrong="x")
+
+
+def test_raising_sink_is_counted_not_propagated():
+    reg = MetricsRegistry()
+    seen = []
+
+    def bad_sink(name, labels, value):
+        raise RuntimeError("exporter down")
+
+    reg.add_sink(bad_sink)
+    reg.add_sink(lambda name, labels, value: seen.append((name, value)))
+    c = reg.counter("repro_t_sink_total", "S.")
+    c.inc()
+    c.inc()
+    # The raising sink never reaches the caller, is counted per sample,
+    # and does not starve the healthy sink registered after it.
+    assert c.labels().value == 2.0
+    assert reg.errors == 2
+    assert seen == [("repro_t_sink_total", 1.0), ("repro_t_sink_total", 2.0)]
+
+
+def test_fail_open_decorator_counts_and_returns_none():
+    reg = MetricsRegistry()
+
+    class Facade:
+        def __init__(self):
+            self.registry = reg
+
+        @fail_open
+        def boom(self):
+            raise RuntimeError("instrumentation bug")
+
+        @fail_open
+        def ok(self):
+            return 42
+
+    f = Facade()
+    assert f.boom() is None
+    assert f.ok() == 42
+    assert reg.errors == 1
+
+
+def test_default_registry_is_a_process_singleton():
+    assert default_registry() is default_registry()
+    assert Observability().registry is default_registry()
+    assert Observability(registry=MetricsRegistry()).registry \
+        is not default_registry()
+
+
+def test_prometheus_exposition_golden_format():
+    reg = MetricsRegistry()
+    reg.gauge("repro_demo_pending", "Pending.").set(2)
+    reg.counter("repro_demo_requests_total", "Demo requests.",
+                ("task",)).labels(task="gmres").inc(3)
+    h = reg.histogram("repro_demo_wait_seconds", "Wait.", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(5.0)
+    assert render_prometheus(reg) == (
+        "# HELP repro_demo_pending Pending.\n"
+        "# TYPE repro_demo_pending gauge\n"
+        "repro_demo_pending 2\n"
+        "# HELP repro_demo_requests_total Demo requests.\n"
+        "# TYPE repro_demo_requests_total counter\n"
+        'repro_demo_requests_total{task="gmres"} 3\n'
+        "# HELP repro_demo_wait_seconds Wait.\n"
+        "# TYPE repro_demo_wait_seconds histogram\n"
+        'repro_demo_wait_seconds_bucket{le="0.1"} 1\n'
+        'repro_demo_wait_seconds_bucket{le="1"} 1\n'
+        'repro_demo_wait_seconds_bucket{le="+Inf"} 2\n'
+        "repro_demo_wait_seconds_sum 5.05\n"
+        "repro_demo_wait_seconds_count 2\n"
+        "# HELP repro_obs_errors_total Instrumentation exceptions "
+        "swallowed by the fail-open guard.\n"
+        "# TYPE repro_obs_errors_total counter\n"
+        "repro_obs_errors_total 0\n")
+    assert lint_exposition(render_prometheus(reg)) == []
+    js = render_json(reg)
+    assert js["repro_demo_requests_total"]["samples"][0] == {
+        "labels": {"task": "gmres"}, "value": 3.0}
+    assert js["repro_demo_wait_seconds"]["samples"][0]["count"] == 2
+
+
+def test_exposition_lint_catches_violations():
+    bad = (
+        "# TYPE bad_metric counter\n"
+        "bad_metric 1\n"
+        "# TYPE repro_foo counter\n"
+        "repro_foo 2\n"
+        "# TYPE repro_request_latency histogram\n"
+        'repro_request_latency_bucket{le="+Inf"} 1\n'
+        "repro_request_latency_sum 1\n"
+        "repro_request_latency_count 1\n"
+        'repro_thing{BadLabel="x"} 1\n')
+    problems = "\n".join(lint_exposition(bad))
+    assert "bad_metric" in problems and "repro_" in problems
+    assert "repro_foo" in problems and "_total" in problems
+    assert "repro_request_latency" in problems and "_seconds" in problems
+    assert "BadLabel" in problems
+
+
+# ---------------------------------------------------------------------------
+# Tracer + trajectory log (unit)
+# ---------------------------------------------------------------------------
+
+def test_tracer_ring_is_bounded_and_filterable():
+    tr = Tracer(capacity=4)
+    for i in range(6):
+        tr.add_span("s", t0=float(i), t1=float(i) + 0.5, tid=i % 2)
+    assert len(tr) == 4                       # ring kept the most recent
+    assert [s.t0 for s in tr.spans()] == [2.0, 3.0, 4.0, 5.0]
+    assert all(s.tid == 1 for s in tr.spans(tid=1))
+    ev = tr.chrome_trace()["traceEvents"]
+    assert len(ev) == 4
+    assert ev[0] == {"name": "s", "cat": "request", "ph": "X",
+                     "ts": 2e6, "dur": 0.5e6, "pid": 0, "tid": 0}
+
+
+def test_tracer_span_contextmanager_nests(tmp_path):
+    clock = FakeClock()
+    tr = Tracer(clock=clock)
+    with tr.span("outer", tid=7):
+        clock.advance(1.0)
+        with tr.span("inner", tid=7, detail="x"):
+            clock.advance(2.0)
+        clock.advance(1.0)
+    inner, outer = tr.spans()                 # inner closes first
+    assert (inner.name, outer.name) == ("inner", "outer")
+    assert outer.t0 <= inner.t0 <= inner.t1 <= outer.t1
+    assert inner.duration == pytest.approx(2.0)
+    assert outer.duration == pytest.approx(4.0)
+    assert inner.args == {"detail": "x"}
+    path = tmp_path / "trace.json"
+    tr.dump(str(path))
+    with open(path) as f:
+        assert len(json.load(f)["traceEvents"]) == 2
+
+
+def test_trajectory_log_roundtrip_and_corruption_tolerance(tmp_path):
+    path = str(tmp_path / "traj.jsonl")
+    with TrajectoryLog(path) as log:
+        log.append({"task": "a", "reward": np.float64(1.5),
+                    "features": [np.float32(2.0)], "request_id": 0})
+        log.append({"task": "b", "reward": 2.0, "request_id": 1})
+        assert log.written == 2
+    # Simulate a torn tail write of a crashed server.
+    with open(path, "a") as f:
+        f.write('{"task": "c", "rew')
+    recs = TrajectoryLog.read(path)
+    assert len(recs) == 2                     # corrupt tail skipped
+    assert recs[0]["reward"] == 1.5           # numpy scalars -> floats
+    assert recs[0]["features"] == [2.0]
+    assert TrajectoryLog.read(path, task="b") == [
+        {"task": "b", "reward": 2.0, "request_id": 1}]
+
+
+# ---------------------------------------------------------------------------
+# Telemetry satellites: throughput anchor, per-bucket reservoirs
+# ---------------------------------------------------------------------------
+
+def test_throughput_window_is_anchored_at_first_submit():
+    tel = Telemetry()
+    tel.on_submit(16, now=10.0)
+    tel.on_response(2.0, ("fp32",), 0, 1.0, now=12.0, bucket=16)
+    # One response over the [first submit, last response] window: 1/2 s.
+    # The old first-response anchor reported 0 for exactly this case.
+    assert tel.throughput_rps == pytest.approx(0.5)
+    tel.on_response(1.0, ("fp32",), 0, 1.0, now=14.0, bucket=16)
+    assert tel.throughput_rps == pytest.approx(2 / 4.0)
+    assert tel.snapshot()["throughput_rps"] == pytest.approx(0.5)
+
+
+def test_per_bucket_latency_reservoirs():
+    tel = Telemetry(max_bucket_latency_samples=4)
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0):
+        tel.on_response(v, (), 0, 0.0, now=v, bucket=16)
+    tel.on_response(10.0, (), 0, 0.0, now=6.0, bucket=32)
+    pb = tel.latency_percentiles_per_bucket()
+    assert set(pb) == {16, 32}
+    # Bounded reservoir: bucket 16 kept the most recent 4 samples.
+    assert pb[16]["p50"] == pytest.approx(3.5)
+    assert pb[32]["p99"] == pytest.approx(10.0)
+    snap = tel.snapshot()
+    assert snap["latency_s_per_bucket"][16]["p99"] == pytest.approx(
+        np.percentile([2.0, 3.0, 4.0, 5.0], 99))
+
+
+def test_backend_fallback_is_counted():
+    import jax
+    if jax.default_backend() == "tpu":
+        pytest.skip("pallas is the real fast path on TPU; no fallback")
+    import warnings
+
+    from repro.precision.backend import resolve_backend
+    fam = default_registry().counter(
+        "repro_backend_fallbacks_total", "", ("requested", "served"))
+    child = fam.labels(requested="pallas", served="jnp")
+    before = child.value
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert resolve_backend("pallas").name == "jnp"
+    assert child.value == before + 1
+
+
+# ---------------------------------------------------------------------------
+# Service integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def warm_root(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("obsreg") / "reg")
+    rng = np.random.default_rng(7)
+    train = generate_dense_set(6, rng, n_range=(12, 28),
+                               log10_kappa_range=(1, 6))
+    env = GMRESIREnv(train, SPACE, IR, chunk=4, bucket_step=16)
+    PolicyRegistry.warm_start(root, env, W1, TrainConfig(episodes=2))
+    return root
+
+
+def _server(root, obs, clock=None, seed=0):
+    return AutotuneServer(
+        PolicyRegistry(root), IR, W1,
+        BatcherConfig(max_batch=4, max_wait_s=0.005,
+                      bucket_step=16, min_bucket=16),
+        OnlineConfig(), clock=clock or time.monotonic, seed=seed, obs=obs)
+
+
+def _requests(n, seed, n_range=(12, 28)):
+    rng = np.random.default_rng(seed)
+    return generate_dense_set(n, rng, n_range, log10_kappa_range=(1, 6))
+
+
+class _BrokenTracer(Tracer):
+    def add_span(self, *a, **k):
+        raise RuntimeError("tracer down")
+
+
+class _BrokenLog:
+    def append(self, record):
+        raise OSError("disk full")
+
+    def close(self):
+        pass
+
+
+def test_injected_obs_faults_never_change_solve_results(warm_root):
+    """The acceptance property of the whole layer (DESIGN.md §8.1): a
+    server whose exporter sink, tracer, or trajectory log raises on
+    every call returns byte-for-byte the same responses as one with
+    observability disabled — and reports the faults it swallowed."""
+    reqs = _requests(8, seed=3)
+
+    def run(obs):
+        srv = _server(warm_root, obs, clock=FakeClock(), seed=0)
+        ids = [srv.submit(s) for s in reqs]
+        srv.drain()
+        out = [srv.poll(i) for i in ids]
+        assert srv.pending == 0 and all(r is not None for r in out)
+        return out
+
+    base = run(False)                          # observability disabled
+
+    reg_a = MetricsRegistry()
+    reg_a.add_sink(lambda *a: (_ for _ in ()).throw(RuntimeError("sink")))
+    broken_sink_and_tracer = Observability(registry=reg_a,
+                                           tracer=_BrokenTracer())
+    got_a = run(broken_sink_and_tracer)
+
+    reg_b = MetricsRegistry()
+    broken_trajlog = Observability(registry=reg_b)
+    broken_trajlog.trajlog = _BrokenLog()
+    got_b = run(broken_trajlog)
+
+    for got, reg in ((got_a, reg_a), (got_b, reg_b)):
+        for r, b in zip(got, base):
+            assert r.request_id == b.request_id
+            assert r.action == b.action and r.state == b.state
+            assert r.bucket == b.bucket
+            assert r.reward == b.reward        # exact, not approx
+            assert r.eps == b.eps and r.drift == b.drift
+            assert int(r.record.status) == int(b.record.status)
+            assert float(r.record.cost) == float(b.record.cost)
+        assert reg.errors > 0                  # faults were accounted
+
+
+def _get(url):
+    try:
+        with urllib.request.urlopen(url, timeout=10) as resp:
+            return resp.status, resp.read().decode(), \
+                resp.headers.get("Content-Type", "")
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode(), e.headers.get("Content-Type", "")
+
+
+def test_http_front_door_live_scrape(warm_root):
+    srv = _server(warm_root, Observability(registry=MetricsRegistry()))
+    http = srv.serve_obs()
+    try:
+        assert srv.serve_obs() is http         # idempotent
+
+        code, body, _ = _get(http.url + "/healthz")
+        assert code == 200 and json.loads(body) == {"status": "ok"}
+
+        # Unready until the bucket grid is warm (nothing flushed yet).
+        code, body, _ = _get(http.url + "/readyz")
+        assert code == 503 and json.loads(body)["status"] == "unready"
+
+        for s in _requests(4, seed=5, n_range=(12, 14)):   # one bucket
+            srv.submit(s)
+        srv.drain()
+        code, body, _ = _get(http.url + "/readyz")
+        assert code == 200 and json.loads(body)["status"] == "ready"
+
+        # /metrics: Prometheus text format, convention-clean, and the
+        # serving families are present with real samples.
+        code, text, ctype = _get(http.url + "/metrics")
+        assert code == 200 and ctype.startswith("text/plain")
+        assert "version=0.0.4" in ctype
+        assert lint_exposition(text) == []
+        assert 'repro_service_requests_total{task="gmres_ir",bucket="16"} 4' \
+            in text
+        assert "repro_service_request_latency_seconds_bucket" in text
+        assert "repro_obs_errors_total 0" in text
+        assert 'repro_obs_scrapes_total{path="/readyz"} 2' in text
+
+        code, body, ctype = _get(http.url + "/metrics.json")
+        assert code == 200 and ctype.startswith("application/json")
+        js = json.loads(body)
+        assert js["repro_service_responses_total"]["type"] == "counter"
+
+        code, body, _ = _get(http.url + "/telemetry")
+        assert code == 200 and json.loads(body)["responses"] == 4
+
+        code, body, _ = _get(http.url + "/trace")
+        assert code == 200 and json.loads(body)["traceEvents"]
+
+        code, body, _ = _get(http.url + "/nope")
+        assert code == 404 and json.loads(body)["error"] == "not found"
+    finally:
+        srv.obs.close()
+
+
+def test_request_spans_order_and_trajectory_log_roundtrip(warm_root,
+                                                          tmp_path):
+    path = str(tmp_path / "traj.jsonl")
+    obs = Observability(registry=MetricsRegistry(), trajectory_path=path)
+    srv = _server(warm_root, obs)
+    reqs = _requests(8, seed=9)
+    ids = [srv.submit(s) for s in reqs]
+    srv.drain()
+    resp = {i: srv.poll(i) for i in ids}
+
+    # Six spans per request, chained contiguously inside the envelope:
+    # submit -> queue_wait -> solve -> reward -> q_update.
+    for rid in ids:
+        spans = {s.name: s for s in obs.tracer.spans(tid=rid)}
+        assert set(spans) == {"request", "submit", "queue_wait", "solve",
+                              "reward", "q_update"}
+        for s in spans.values():
+            assert s.t1 >= s.t0
+        assert spans["request"].t0 == spans["submit"].t0
+        assert spans["submit"].t1 == spans["queue_wait"].t0
+        assert spans["queue_wait"].t1 == spans["solve"].t0
+        assert spans["solve"].t1 == spans["reward"].t0
+        assert spans["reward"].t1 == spans["q_update"].t0
+        assert spans["q_update"].t1 == pytest.approx(spans["request"].t1)
+        assert spans["solve"].args["n_rows"] >= 1
+        assert spans["request"].args["action"] == resp[rid].action
+
+    # Trajectory log: one record per response, full schema, matching
+    # the polled values.
+    obs.close()
+    recs = TrajectoryLog.read(path)
+    assert len(recs) == len(ids)
+    by_id = {r["request_id"]: r for r in recs}
+    for i in ids:
+        rec, r = by_id[i], resp[i]
+        assert set(TrajectoryLog.FIELDS) <= set(rec)
+        assert rec["action"] == r.action and rec["state"] == r.state
+        assert rec["reward"] == pytest.approx(r.reward)
+        assert rec["bucket"] == r.bucket
+        assert isinstance(rec["explore"], bool)
+        assert 0.0 <= rec["eps"] <= 1.0
+        assert rec["policy_version"] == r.policy_version
+        assert all(isinstance(x, float) for x in rec["features"])
+        assert rec["outcome"]["status"] == int(r.record.status)
+
+
+def test_snapshot_embeds_telemetry_evidence(warm_root, tmp_path):
+    root = str(tmp_path / "reg")
+    shutil.copytree(warm_root, root)           # keep the shared fixture
+    srv = _server(root, Observability(registry=MetricsRegistry()))
+    for s in _requests(4, seed=11, n_range=(12, 14)):
+        srv.submit(s)
+    srv.drain()
+    version = srv.snapshot()
+    tel = srv.registry.meta(version)["telemetry"]
+    assert tel["responses"] == 4
+    assert {"reward_ewma", "abs_rpe_ewma", "drift_events",
+            "throughput_rps", "latency_s",
+            "latency_s_per_bucket"} <= set(tel)
+    assert tel["throughput_rps"] > 0
+    assert {"p50", "p90", "p99"} <= set(tel["latency_s"])
+    # JSON round-trip stringifies bucket keys; the one bucket is 16.
+    (bucket,) = tel["latency_s_per_bucket"]
+    assert int(bucket) == 16
+    assert tel["latency_s_per_bucket"][bucket]["p99"] >= 0
+    text = render_prometheus(srv.obs.registry)
+    assert 'repro_service_snapshots_total{task="gmres_ir"} 1' in text

@@ -343,3 +343,9 @@ def test_service_bench_emits_json_report(tmp_path, monkeypatch):
     assert setting["rps"] > 0
     assert {"p50", "p90", "p99"} <= set(setting["latency_s"])
     assert all(v >= 0 for v in setting["latency_s"].values())
+    # Metrics-on vs metrics-off arm (the fail-open layer's overhead).
+    ov = report["obs_overhead"]
+    assert ov["max_batch"] == 2
+    assert ov["rps_on"] > 0 and ov["rps_off"] > 0
+    assert ov["overhead_pct"] == pytest.approx(
+        100.0 * (1.0 - ov["rps_on"] / ov["rps_off"]))
