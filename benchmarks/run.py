@@ -85,6 +85,10 @@ def write_bench_results(path: str = BENCH_RESULTS_PATH) -> dict:
         if service.get("obs_overhead"):
             # Metrics-on vs metrics-off req/s (acceptance bar: <= 5%).
             summary["service_obs_overhead"] = service["obs_overhead"]
+        if service.get("http_front_door"):
+            # Same trace over the asyncio front door (DESIGN.md §9.1):
+            # wire + JSON + admission overhead vs in-process serving.
+            summary["http_front_door"] = service["http_front_door"]
     tasks = load_report("task_bench")
     if tasks:
         summary["tasks"] = {

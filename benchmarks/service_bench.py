@@ -9,7 +9,10 @@ serving, not XLA compilation.
 An extra arm re-runs one batch size with observability fully off
 (`obs=False`) vs fully on (metrics + tracer + trajectory log) and
 records the req/s overhead — the fail-open layer's <= 5% acceptance
-bar (DESIGN.md §8) — under ``obs_overhead`` in the report.
+bar (DESIGN.md §8) — under ``obs_overhead`` in the report. A second
+extra arm replays the same trace through the asyncio HTTP front door
+(DESIGN.md §9.1) and records req/s + p50/p99 vs the in-process
+setting under ``http_front_door``.
 
 CSV rows follow the `benchmarks/run.py` contract (name,us_per_call,derived)
 and the full report lands in benchmarks/results/service_bench.json.
@@ -103,6 +106,80 @@ def bench_setting(registry_root, trace, max_batch: int, ir_cfg,
     }
 
 
+def bench_http(registry_root, trace, max_batch: int, ir_cfg,
+               bucket_step: int) -> dict:
+    """The same trace over the asyncio HTTP front door: fire-and-poll
+    against `/v1/solve` + `/v1/result/{id}`, so the delta vs the
+    in-process setting is the wire + JSON + admission overhead."""
+    import json as _json
+    import urllib.error
+    import urllib.request
+
+    from repro.service.http import HttpConfig, serve_http
+
+    srv = AutotuneServer(
+        PolicyRegistry(registry_root), ir_cfg, W1,
+        BatcherConfig(max_batch=max_batch, max_wait_s=0.02,
+                      bucket_step=bucket_step, min_bucket=bucket_step),
+        OnlineConfig(), obs=False)
+    fd = serve_http(srv, cfg=HttpConfig(
+        max_n=4096, max_queue_depth=len(trace) + 8 * max_batch,
+        flush_interval_s=0.002))
+
+    def call(method, path, payload=None):
+        data = (_json.dumps(payload).encode()
+                if payload is not None else None)
+        req = urllib.request.Request(
+            fd.url + path, data=data, method=method,
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=120) as r:
+                return r.status, _json.loads(r.read().decode())
+        except urllib.error.HTTPError as e:
+            return e.code, {}
+
+    def payload(s):
+        return {"A": s.A.tolist(), "b": s.b.tolist(),
+                "x_true": s.x_true.tolist()}
+
+    try:
+        # Warm-up: compile each bucket's executable outside the timed
+        # window (mirrors bench_setting).
+        buckets = {}
+        for s in trace:
+            buckets.setdefault(bucket_of(s.n, bucket_step, bucket_step), s)
+        for s in buckets.values():
+            call("POST", "/v1/solve:sync", payload(s))
+
+        t0 = time.perf_counter()
+        rids = []
+        for s in trace:
+            code, acc = call("POST", "/v1/solve", payload(s))
+            assert code == 202, code
+            rids.append(acc["request_id"])
+        results = {}
+        while len(results) < len(rids):
+            for rid in rids:
+                if rid in results:
+                    continue
+                code, body = call("GET", f"/v1/result/{rid}")
+                if code == 200:
+                    results[rid] = body
+        wall = time.perf_counter() - t0
+    finally:
+        fd.close()
+    lat = np.array([results[rid]["latency_s"] for rid in rids],
+                   dtype=np.float64)
+    return {
+        "max_batch": max_batch,
+        "n_requests": len(trace),
+        "wall_s": wall,
+        "rps": len(trace) / wall,
+        "latency_s": {f"p{q}": float(np.percentile(lat, q))
+                      for q in (50, 90, 99)},
+    }
+
+
 def run(full: bool = False, recompute: bool = False,
         registry_root: str = None, n_requests: int = None,
         n_range: tuple = None, batches: tuple = None,
@@ -156,6 +233,18 @@ def run(full: bool = False, recompute: bool = False,
         "rps_on": on["rps"],
         "overhead_pct": 100.0 * (1.0 - on["rps"] / off["rps"]),
     }
+    # HTTP front-door arm: the same trace fire-and-polled over the wire
+    # vs the in-process setting at the same batch size.
+    http = bench_http(root, trace, mb, ir_cfg, bucket_step)
+    inproc = next(s for s in report["settings"] if s["max_batch"] == mb)
+    report["http_front_door"] = {
+        "max_batch": mb,
+        "n_requests": http["n_requests"],
+        "rps": http["rps"],
+        "latency_s": http["latency_s"],
+        "rps_inproc": inproc["rps"],
+        "overhead_pct": 100.0 * (1.0 - http["rps"] / inproc["rps"]),
+    }
     save_report("service_bench", report)
     if root_ctx is not None:
         root_ctx.cleanup()
@@ -177,6 +266,14 @@ def emit_rows(report: dict) -> list:
             f"service/obs_overhead_b{ov['max_batch']},{us:.0f},"
             f"rps_on={ov['rps_on']:.2f};rps_off={ov['rps_off']:.2f};"
             f"overhead_pct={ov['overhead_pct']:.2f}")
+    hf = report.get("http_front_door")
+    if hf:
+        us = 1e6 / max(hf["rps"], 1e-9)
+        rows.append(
+            f"service/http_b{hf['max_batch']},{us:.0f},"
+            f"rps={hf['rps']:.2f};p50={hf['latency_s']['p50']:.4f};"
+            f"p99={hf['latency_s']['p99']:.4f};"
+            f"overhead_pct={hf['overhead_pct']:.2f}")
     return rows
 
 

@@ -1,0 +1,157 @@
+"""HTTP front door + shadow/canary rollout controller, end to end:
+
+1. Warm-start a versioned policy registry (offline training).
+2. Put a `ShadowServer` behind the asyncio HTTP front door and solve
+   over the wire: fire-and-poll (`/v1/solve` + `/v1/result/{id}`) and
+   synchronous (`/v1/solve:sync`).
+3. Stage a deliberately degraded candidate (Q-table pinned to the
+   all-bf16 arm, whose bf16 residuals stagnate short of tau) — watch
+   the gate trip and auto-rollback restore the baseline.
+4. Stage a healthy candidate on the same stream — watch it pass
+   consecutive decision windows and auto-promote.
+5. Inspect `/v1/policy` and the decision-trail JSONL along the way.
+
+    PYTHONPATH=src python examples/serve_http.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import json
+import os
+import tempfile
+import urllib.request
+
+import numpy as np
+
+from repro.core import GMRESIREnv, TrainConfig, W1, reduced_action_space
+from repro.data import generate_dense_set
+from repro.service import (AutotuneServer, BatcherConfig, OnlineConfig,
+                           PolicyRegistry, RolloutConfig, ShadowServer)
+from repro.service.http import HttpConfig, serve_http
+from repro.solvers import IRConfig
+
+
+def http(method, url, payload=None):
+    data = json.dumps(payload).encode() if payload is not None else None
+    req = urllib.request.Request(
+        url, data=data, method=method,
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=60) as r:
+            return r.status, json.loads(r.read().decode())
+    except urllib.error.HTTPError as e:
+        body = e.read().decode()
+        return e.code, (json.loads(body) if body else {})
+
+
+def payload(system):
+    return {"A": system.A.tolist(), "b": system.b.tolist(),
+            "x_true": system.x_true.tolist()}
+
+
+def drive(url, shadow, systems, tag):
+    """Sync-solve until the rollout controller leaves the canary phase."""
+    rewards = []
+    for i, system in enumerate(systems):
+        code, body = http("POST", url + "/v1/solve:sync", payload(system))
+        assert code == 200, body
+        rewards.append(body["reward"])
+        if shadow.phase != "canary":
+            print(f"  [{tag}] decision after {i + 1} requests "
+                  f"(mean reward {np.mean(rewards):+.2f})")
+            return
+    print(f"  [{tag}] stream ended still in canary "
+          f"(mean reward {np.mean(rewards):+.2f})")
+
+
+def main():
+    rng = np.random.default_rng(7)
+    ir_cfg = IRConfig(tau=1e-6)
+    space = reduced_action_space()
+    bcfg = BatcherConfig(max_batch=4, max_wait_s=0.002, bucket_step=16,
+                         min_bucket=16)
+
+    def requests(n, seed):
+        return generate_dense_set(n, np.random.default_rng(seed),
+                                  n_range=(12, 28),
+                                  log10_kappa_range=(3, 6))
+
+    with tempfile.TemporaryDirectory() as root:
+        print("== 1. warm-start registry + baseline telemetry ==")
+        train = generate_dense_set(8, rng, n_range=(12, 28),
+                                   log10_kappa_range=(3, 6))
+        env = GMRESIREnv(train, space, ir_cfg, chunk=4, bucket_step=16)
+        reg, version, _ = PolicyRegistry.warm_start(
+            os.path.join(root, "reg"), env, W1, TrainConfig(episodes=6))
+        # Serve some traffic and snapshot so the baseline's meta carries
+        # the telemetry evidence the rollout gates read.
+        seed_srv = AutotuneServer(reg, ir_cfg, W1, bcfg, OnlineConfig(),
+                                  seed=0, obs=False)
+        for system in requests(40, seed=3):
+            seed_srv.submit(system)
+        seed_srv.drain()
+        baseline = seed_srv.snapshot(note="baseline with telemetry")
+        print(f"  baseline {baseline} "
+              f"(warm-start {version} + 40 served requests)")
+
+        print("== 2. HTTP front door over a ShadowServer ==")
+        log_path = os.path.join(root, "decisions.jsonl")
+        shadow = ShadowServer(
+            reg, ir_cfg, W1, bcfg, OnlineConfig(),
+            rollout_cfg=RolloutConfig(canary_frac=0.3, decision_window=24,
+                                      min_samples=20, promote_windows=2,
+                                      reward_margin=10.0,
+                                      pass_rate_floor=0.12,
+                                      pass_rate_margin=0.9, p99_bound=50.0),
+            seed=0, decision_log_path=log_path)
+        fd = serve_http(shadow, cfg=HttpConfig(max_n=64,
+                                               flush_interval_s=0.002))
+        print(f"  listening at {fd.url}")
+        system = requests(1, seed=1)[0]
+        code, acc = http("POST", fd.url + "/v1/solve", payload(system))
+        rid = acc["request_id"]
+        print(f"  POST /v1/solve -> {code} request_id={rid} "
+              f"bucket={acc['bucket']}")
+        while True:
+            code, body = http("GET", fd.url + f"/v1/result/{rid}")
+            if code == 200:
+                break
+        print(f"  GET /v1/result/{rid} -> 200 "
+              f"action=({', '.join(body['action_names'])}) "
+              f"reward={body['reward']:+.2f}")
+
+        print("== 3. degraded candidate: auto-rollback ==")
+        bad = reg.load()
+        bad.qtable.Q[:] = 0.0
+        bad.qtable.Q[:, 0] = 1.0       # pin greedy to the all-bf16 arm
+        vbad = reg.publish(bad, note="degraded on purpose")
+        shadow.start_rollout(vbad)
+        print(f"  staged {vbad} (current={reg.current_version()})")
+        drive(fd.url, shadow, requests(48, seed=9), "degraded")
+        last = shadow.decisions[-1]
+        print(f"  phase={shadow.phase} failures={last.failures} "
+              f"current={reg.current_version()}")
+
+        print("== 4. healthy candidate: auto-promote ==")
+        vgood = reg.publish(reg.load(), note="healthy copy")
+        shadow.start_rollout(vgood)
+        drive(fd.url, shadow, requests(60, seed=9), "healthy")
+        print(f"  phase={shadow.phase} current={reg.current_version()}")
+
+        print("== 5. policy endpoint + decision trail ==")
+        code, pol = http("GET", fd.url + "/v1/policy")
+        print(f"  GET /v1/policy -> current={pol['current']} "
+              f"rollout.phase={pol['rollout']['phase']}")
+        events = [json.loads(ln) for ln in open(log_path) if ln.strip()]
+        for e in events:
+            if e["event"] == "decision":
+                print(f"  decision: {e['outcome']:8s} "
+                      f"responses={e['responses']} "
+                      f"failures={e['failures']}")
+        fd.close()
+        print("  front door drained and closed")
+
+
+if __name__ == "__main__":
+    main()

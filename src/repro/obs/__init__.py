@@ -46,23 +46,29 @@ class Observability:
     def __init__(self, registry: Optional[MetricsRegistry] = None,
                  tracer: Optional[Tracer] = None,
                  trajectory_path: Optional[str] = None,
-                 trace_capacity: int = 4096):
+                 trace_capacity: int = 4096,
+                 trajectory_max_bytes: Optional[int] = None,
+                 trajectory_max_segments: int = 3):
         self.registry = registry if registry is not None \
             else default_registry()
         self.tracer = tracer if tracer is not None \
             else Tracer(capacity=trace_capacity)
-        self.trajlog = (TrajectoryLog(trajectory_path)
-                        if trajectory_path else None)
+        self.trajlog = (TrajectoryLog(
+            trajectory_path, max_bytes=trajectory_max_bytes,
+            max_segments=trajectory_max_segments)
+            if trajectory_path else None)
         self.http: Optional[ObsHTTPServer] = None
 
     def serve(self, host: str = "127.0.0.1", port: int = 0,
-              ready_fn=None, telemetry_fn=None) -> ObsHTTPServer:
+              ready_fn=None, telemetry_fn=None,
+              rollout_fn=None) -> ObsHTTPServer:
         """Start (or return the running) HTTP front door."""
         if self.http is None:
             self.http = ObsHTTPServer(
                 self.registry, host=host, port=port, ready_fn=ready_fn,
                 telemetry_fn=telemetry_fn,
-                trace_fn=self.tracer.chrome_trace)
+                trace_fn=self.tracer.chrome_trace,
+                rollout_fn=rollout_fn)
         return self.http
 
     def close(self) -> None:

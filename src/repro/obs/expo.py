@@ -16,7 +16,9 @@ Endpoints:
   * ``/readyz``        readiness — 200 iff the wired `ready_fn()` is
     truthy (for `AutotuneServer`: policy snapshot loaded + bucket grid
     warm), else 503 with a JSON reason
-  * ``/telemetry``     the wired telemetry snapshot as JSON (optional)
+  * ``/telemetry``     the wired telemetry snapshot as JSON (optional;
+    includes a ``rollout`` key when a rollout controller is wired)
+  * ``/rollout``       canary rollout-controller state (optional)
   * ``/trace``         Chrome trace-event JSON of recent spans (optional)
 
 `lint_exposition` enforces the repo's metric name/label conventions
@@ -181,11 +183,13 @@ class ObsHTTPServer:
                  host: str = "127.0.0.1", port: int = 0,
                  ready_fn: Optional[Callable[[], object]] = None,
                  telemetry_fn: Optional[Callable[[], dict]] = None,
-                 trace_fn: Optional[Callable[[], dict]] = None):
+                 trace_fn: Optional[Callable[[], dict]] = None,
+                 rollout_fn: Optional[Callable[[], dict]] = None):
         self.registry = registry
         self.ready_fn = ready_fn
         self.telemetry_fn = telemetry_fn
         self.trace_fn = trace_fn
+        self.rollout_fn = rollout_fn
         obs = self
 
         class Handler(BaseHTTPRequestHandler):
@@ -246,7 +250,13 @@ class ObsHTTPServer:
                 {"status": "ready" if ready else "unready"})
         elif path == "/telemetry" and self.telemetry_fn is not None:
             scrapes.labels(path=path).inc()
-            self._respond_json(handler, 200, self.telemetry_fn())
+            snap = self.telemetry_fn()
+            if self.rollout_fn is not None:
+                snap = dict(snap, rollout=self.rollout_fn())
+            self._respond_json(handler, 200, snap)
+        elif path == "/rollout" and self.rollout_fn is not None:
+            scrapes.labels(path=path).inc()
+            self._respond_json(handler, 200, self.rollout_fn())
         elif path == "/trace" and self.trace_fn is not None:
             scrapes.labels(path=path).inc()
             self._respond_json(handler, 200, self.trace_fn())

@@ -14,10 +14,19 @@ most the final partial line, and `read()` skips partial/corrupt lines
 rather than failing, so a log being written is safely readable. All
 server-side writes go through the fail-open guard (DESIGN.md §8.1): a
 full disk or closed file never breaks the solve path.
+
+With ``max_bytes`` set, the log rotates: when the active file crosses
+the limit it is renamed to ``<path>.1`` (older segments shift to
+``.2`` … ``.N``; the oldest past ``max_segments`` is deleted) and a
+fresh active file is opened. Readers span all live segments oldest
+first, so rotation is invisible to `read()`/`iter_records()`. Rotation
+failures are swallowed (fail-open): appends keep going to the current
+file.
 """
 from __future__ import annotations
 
 import json
+import os
 import threading
 from typing import Iterator, List, Optional
 
@@ -40,11 +49,15 @@ class TrajectoryLog:
               "action", "action_names", "eps", "explore", "reward",
               "outcome", "latency_s", "policy_version", "drift")
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, max_bytes: Optional[int] = None,
+                 max_segments: int = 3):
         self.path = str(path)
+        self.max_bytes = max_bytes
+        self.max_segments = int(max_segments)
         self._lock = threading.Lock()
         self._fh = open(self.path, "a", buffering=1)   # line-buffered
         self.written = 0
+        self.rotations = 0
 
     def append(self, record: dict) -> None:
         line = json.dumps(record, default=_jsonable,
@@ -52,6 +65,31 @@ class TrajectoryLog:
         with self._lock:
             self._fh.write(line + "\n")
             self.written += 1
+            if (self.max_bytes is not None
+                    and self._fh.tell() >= self.max_bytes):
+                self._rotate()
+
+    def _rotate(self) -> None:
+        """Shift segments ``.k`` -> ``.k+1``, active -> ``.1``; open a
+        fresh active file. Caller holds the lock. Never raises — a
+        failed rename leaves the log appending to the current file."""
+        try:
+            self._fh.close()
+            for k in range(self.max_segments, 0, -1):
+                src = f"{self.path}.{k}"
+                if not os.path.exists(src):
+                    continue
+                if k == self.max_segments:
+                    os.unlink(src)
+                else:
+                    os.replace(src, f"{self.path}.{k + 1}")
+            if self.max_segments > 0:
+                os.replace(self.path, f"{self.path}.1")
+            self.rotations += 1
+        except OSError:
+            pass
+        finally:
+            self._fh = open(self.path, "a", buffering=1)
 
     def close(self) -> None:
         with self._lock:
@@ -66,17 +104,33 @@ class TrajectoryLog:
 
     # -- reading -----------------------------------------------------------
     @staticmethod
+    def segments(path: str) -> List[str]:
+        """Live segment files for `path`, oldest first (rotated ``.N`` …
+        ``.1`` then the active file)."""
+        out: List[str] = []
+        k = 1
+        while os.path.exists(f"{path}.{k}"):
+            out.append(f"{path}.{k}")
+            k += 1
+        out.reverse()
+        if os.path.exists(path):
+            out.append(path)
+        return out
+
+    @staticmethod
     def iter_records(path: str) -> Iterator[dict]:
-        """Yield records, skipping blank/partial trailing lines."""
-        with open(path) as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    yield json.loads(line)
-                except json.JSONDecodeError:
-                    continue          # torn tail write of a live log
+        """Yield records across all live segments (oldest first),
+        skipping blank/partial trailing lines."""
+        for seg in TrajectoryLog.segments(path):
+            with open(seg) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        yield json.loads(line)
+                    except json.JSONDecodeError:
+                        continue      # torn tail write of a live log
 
     @classmethod
     def read(cls, path: str,

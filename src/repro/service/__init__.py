@@ -11,10 +11,12 @@ task's `TunableTask` hooks; the server and batcher import no solver.
 """
 from repro.obs import Observability
 from .batcher import BatcherConfig, FlushResult, MicroBatcher
-from .instrument import LearnerInstruments, ServiceInstruments
+from .instrument import (LearnerInstruments, RolloutInstruments,
+                         ServiceInstruments)
 from .online import (DriftDetector, EpsilonController, OnlineConfig,
                      OnlineLearner, OnlineUpdate)
 from .registry import PolicyRegistry
+from .rollout import RolloutConfig, RolloutDecision, ShadowServer
 from .server import AutotuneServer, SolveResponse
 from .telemetry import Ewma, Telemetry
 
@@ -22,5 +24,7 @@ __all__ = [
     "AutotuneServer", "BatcherConfig", "DriftDetector", "EpsilonController",
     "Ewma", "FlushResult", "LearnerInstruments", "MicroBatcher",
     "Observability", "OnlineConfig", "OnlineLearner", "OnlineUpdate",
-    "PolicyRegistry", "ServiceInstruments", "SolveResponse", "Telemetry",
+    "PolicyRegistry", "RolloutConfig", "RolloutDecision",
+    "RolloutInstruments", "ServiceInstruments", "ShadowServer",
+    "SolveResponse", "Telemetry",
 ]

@@ -17,6 +17,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import threading
 import time
 from typing import List, Optional, Tuple
 
@@ -40,6 +41,9 @@ class PolicyRegistry:
     def __init__(self, root: str):
         self.root = root
         os.makedirs(os.path.join(root, "versions"), exist_ok=True)
+        # Serializes CURRENT/HISTORY writes from one process; cross-process
+        # publish races are handled by the atomic mkdir claim in publish().
+        self._lock = threading.RLock()
 
     # -- paths -------------------------------------------------------------
     def _vdir(self, version: str) -> str:
@@ -81,12 +85,21 @@ class PolicyRegistry:
     def publish(self, policy: PrecisionPolicy, note: str = "",
                 extra_meta: Optional[dict] = None) -> str:
         """Write a new snapshot; returns its version name (not yet live)."""
-        existing = self.versions()
         # Numeric max, not existing[-1]: lexicographic order breaks at
         # v10000 and would silently re-allocate (and overwrite) it forever.
-        n = 1 + max((int(v[1:]) for v in existing), default=0)
-        version = f"v{n:04d}"
-        vdir = self._vdir(version)
+        # The version directory is claimed with an atomic exclusive mkdir
+        # so two publishers (threads or processes) can never allocate the
+        # same name — the loser just re-reads and takes the next number.
+        while True:
+            existing = self.versions()
+            n = 1 + max((int(v[1:]) for v in existing), default=0)
+            version = f"v{n:04d}"
+            vdir = self._vdir(version)
+            try:
+                os.makedirs(vdir)
+            except FileExistsError:
+                continue
+            break
         policy.save(vdir)
         meta = {"version": version, "note": note, "created_at": time.time(),
                 "n_states": policy.qtable.n_states,
@@ -102,19 +115,20 @@ class PolicyRegistry:
 
     def promote(self, version: str) -> None:
         """Atomically flip CURRENT to `version`."""
-        if version not in self.versions():
-            raise ValueError(f"unknown version {version!r}")
-        fd, tmp = tempfile.mkstemp(dir=self.root, prefix=".current-")
-        try:
-            with os.fdopen(fd, "w") as f:
+        with self._lock:
+            if version not in self.versions():
+                raise ValueError(f"unknown version {version!r}")
+            fd, tmp = tempfile.mkstemp(dir=self.root, prefix=".current-")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    f.write(version + "\n")
+                os.replace(tmp, self._current_path)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+            with open(self._history_path, "a") as f:
                 f.write(version + "\n")
-            os.replace(tmp, self._current_path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
-        with open(self._history_path, "a") as f:
-            f.write(version + "\n")
         _count("repro_registry_promotes_total",
                "CURRENT-pointer flips (snapshot promotions).")
 
@@ -125,14 +139,15 @@ class PolicyRegistry:
         consecutive rollbacks step v3 -> v2 -> v1 instead of ping-ponging
         between the last two entries (a rollback itself appends to HISTORY).
         """
-        hist = self.history()
-        cur = self.current_version()
-        if cur is None or cur not in hist:
-            raise RuntimeError("no earlier version to roll back to")
-        prior = [v for v in hist[:hist.index(cur)] if v != cur]
-        if not prior:
-            raise RuntimeError("no earlier version to roll back to")
-        self.promote(prior[-1])
+        with self._lock:
+            hist = self.history()
+            cur = self.current_version()
+            if cur is None or cur not in hist:
+                raise RuntimeError("no earlier version to roll back to")
+            prior = [v for v in hist[:hist.index(cur)] if v != cur]
+            if not prior:
+                raise RuntimeError("no earlier version to roll back to")
+            self.promote(prior[-1])
         _count("repro_registry_rollbacks_total",
                "Rollbacks to an earlier promoted version.")
         return prior[-1]

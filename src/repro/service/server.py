@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
@@ -96,7 +97,8 @@ class AutotuneServer:
                  seed: int = 0,
                  max_retained_responses: int = 65536,
                  executor=None,
-                 obs: Union[None, bool, Observability] = None):
+                 obs: Union[None, bool, Observability] = None,
+                 auto_step: bool = True):
         if isinstance(registry, PolicyRegistry):
             self.registry: Optional[PolicyRegistry] = registry
             snapshot = registry.load()
@@ -156,11 +158,18 @@ class AutotuneServer:
             self.obs, getattr(self.task, "name", "unknown"),
             self.executor.name) if self.obs is not None else None)
         self._inflight: Dict[int, _InFlight] = {}
-        # Bounded retention for poll(): oldest un-polled responses are
-        # evicted past the cap, so push-style consumers that never poll
-        # don't leak memory over a long-running server's lifetime.
-        self._responses: Dict[int, SolveResponse] = {}
+        # Bounded LRU retention for poll(): poll() evicts on retrieval,
+        # and the oldest *unclaimed* responses are evicted past the cap
+        # (counted in repro_server_responses_evicted_total), so consumers
+        # that never poll don't leak memory over a long-running server's
+        # lifetime.
+        self._responses: "OrderedDict[int, SolveResponse]" = OrderedDict()
         self._max_retained = max_retained_responses
+        self.responses_evicted = 0
+        # When False, submit() only enqueues — an external pump (the HTTP
+        # front door's background flush loop) drives step() instead of
+        # every caller.
+        self.auto_step = auto_step
         # Optional subscriber, called with each SolveResponse in completion
         # order (the order Q-updates were applied) — push-style consumers.
         self.on_response: Optional[Callable[[SolveResponse], None]] = None
@@ -173,12 +182,12 @@ class AutotuneServer:
                                                                  eps)
         return state, action, eps, explore
 
-    def submit(self, instance) -> int:
+    def submit(self, instance, req_id: Optional[int] = None) -> int:
         t_accept = self.clock()
         feats = self.task.feature_of(instance)
         state, action, eps, explore = self.select_action(feats)
         req_id, bucket = self.batcher.submit(
-            instance, self.action_space.actions[action])
+            instance, self.action_space.actions[action], req_id=req_id)
         now = self.clock()
         self._inflight[req_id] = _InFlight(instance, state, action, eps,
                                            explore, now, bucket,
@@ -187,7 +196,8 @@ class AutotuneServer:
         self.telemetry.on_submit(bucket, now)
         if self._instr is not None:
             self._instr.on_submit(bucket, action, explore, self.pending)
-        self.step()          # flush any bucket this submit filled
+        if self.auto_step:
+            self.step()      # flush any bucket this submit filled
         return req_id
 
     def step(self, force: bool = False) -> List[SolveResponse]:
@@ -232,13 +242,17 @@ class AutotuneServer:
             latency_s=now - info.submitted_at, drift=upd.drift)
         self.telemetry.on_response(resp.latency_s, resp.action_names,
                                    resp.action, r, now,
-                                   bucket=info.bucket)
+                                   bucket=info.bucket,
+                                   status=int(rec.status))
         if self._instr is not None:
             self._instr.on_complete(resp, info, flush, self.telemetry,
                                     t_reward, now)
         self._responses[req_id] = resp
         while len(self._responses) > self._max_retained:
-            self._responses.pop(next(iter(self._responses)))
+            self._responses.popitem(last=False)
+            self.responses_evicted += 1
+            if self._instr is not None:
+                self._instr.on_evict()
         if self.on_response is not None:
             self.on_response(resp)
         return resp
@@ -288,6 +302,10 @@ class AutotuneServer:
                             "responses": tel.responses,
                             "reward_ewma": tel.reward_ewma.value,
                             "abs_rpe_ewma": tel.abs_rpe_ewma.value,
+                            "converged_frac": tel.converged_frac,
+                            "status_counts": {
+                                str(k): v for k, v
+                                in sorted(tel.status_counts.items())},
                             "drift_events": tel.drift_events,
                             "throughput_rps": tel.throughput_rps,
                             "latency_s": tel.latency_percentiles(),

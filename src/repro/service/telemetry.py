@@ -46,6 +46,11 @@ class Telemetry:
         self.requests_per_bucket: Dict[int, int] = {}
         self.usage: Dict[str, int] = {}           # per-step format counts
         self.action_counts: Dict[int, int] = {}
+        # Outcome-status histogram (core.task codes: 0=CONVERGED,
+        # 1=STAGNATED, 2=MAXITER, 3=FAILED). `converged_frac` is the
+        # ferr/nbe pass-rate gate of the canary rollout controller —
+        # CONVERGED means the solver met its ferr/nbe tolerance.
+        self.status_counts: Dict[int, int] = {}
         self.reward_ewma = Ewma(reward_coeff)
         self.reward_sum = 0.0
         self.abs_rpe_ewma = Ewma(reward_coeff)
@@ -78,8 +83,12 @@ class Telemetry:
 
     def on_response(self, latency_s: float, action_names, action: int,
                     reward: float, now: float,
-                    bucket: Optional[int] = None) -> None:
+                    bucket: Optional[int] = None,
+                    status: Optional[int] = None) -> None:
         self.responses += 1
+        if status is not None:
+            self.status_counts[int(status)] = \
+                self.status_counts.get(int(status), 0) + 1
         self._latencies.append(float(latency_s))
         if bucket is not None:
             res = self._latencies_per_bucket.get(bucket)
@@ -123,6 +132,14 @@ class Telemetry:
         return out
 
     @property
+    def converged_frac(self) -> float:
+        """Fraction of responses whose solve met its ferr/nbe tolerance
+        (status CONVERGED) — the rollout controller's pass-rate gate."""
+        if not self.responses:
+            return 0.0
+        return self.status_counts.get(0, 0) / self.responses
+
+    @property
     def throughput_rps(self) -> float:
         """Responses per second over [first submit, last response].
 
@@ -150,6 +167,10 @@ class Telemetry:
             "n_solves": self.solver_rows - self.padded_rows,
             "n_pad_solves": self.padded_rows,
             "pad_waste_frac": self.padded_rows / max(self.solver_rows, 1),
+            "status_counts": {str(k): v
+                              for k, v in sorted(self.status_counts
+                                                 .items())},
+            "converged_frac": self.converged_frac,
             "batches_per_bucket": dict(self.batches_per_bucket),
             "requests_per_bucket": dict(self.requests_per_bucket),
             "usage_per_solve": {k: v / total

@@ -1,0 +1,293 @@
+"""Async HTTP front door: validation, async/sync solve round-trips,
+exactly-once result retrieval, policy endpoint, explicit backpressure
+under an overload burst, and graceful drain on shutdown."""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import GMRESIREnv, TrainConfig, W1, reduced_action_space
+from repro.data import generate_dense_set
+from repro.service import (AutotuneServer, BatcherConfig, OnlineConfig,
+                           PolicyRegistry)
+from repro.service.http import HttpConfig, serve_http
+from repro.solvers import IRConfig
+
+SPACE = reduced_action_space()
+IR = IRConfig(tau=1e-6)
+BCFG = BatcherConfig(max_batch=4, max_wait_s=0.002, bucket_step=16,
+                     min_bucket=16)
+
+
+def _http(method, url, payload=None, raw=None, timeout=60):
+    if raw is not None:
+        data = raw
+    else:
+        data = (json.dumps(payload).encode("utf-8")
+                if payload is not None else None)
+    req = urllib.request.Request(
+        url, data=data, method=method,
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, json.loads(r.read().decode("utf-8")), r.headers
+    except urllib.error.HTTPError as e:
+        body = e.read().decode("utf-8")
+        return e.code, (json.loads(body) if body else {}), e.headers
+
+
+def _payload(system, request_id=None, x_true=True):
+    out = {"A": system.A.tolist(), "b": system.b.tolist()}
+    if x_true:
+        out["x_true"] = system.x_true.tolist()
+    if request_id is not None:
+        out["request_id"] = request_id
+    return out
+
+
+def _await_result(url, rid, timeout=60.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        code, body, _ = _http("GET", f"{url}/v1/result/{rid}")
+        if code == 200:
+            return body
+        assert code == 202, body
+        time.sleep(0.01)
+    raise AssertionError(f"request {rid} never completed")
+
+
+@pytest.fixture(scope="module")
+def http_root(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("httpreg") / "reg")
+    rng = np.random.default_rng(5)
+    train = generate_dense_set(4, rng, n_range=(12, 20),
+                               log10_kappa_range=(1, 4))
+    env = GMRESIREnv(train, SPACE, IR, chunk=4, bucket_step=16)
+    PolicyRegistry.warm_start(root, env, W1, TrainConfig(episodes=1))
+    return root
+
+
+@pytest.fixture()
+def front_door(http_root):
+    srv = AutotuneServer(PolicyRegistry(http_root), IR, W1, BCFG,
+                         OnlineConfig(), seed=0, obs=False)
+    fd = serve_http(srv, cfg=HttpConfig(max_n=64, flush_interval_s=0.002))
+    yield fd
+    fd.close()
+
+
+def _systems(n, seed=11, n_range=(12, 20)):
+    rng = np.random.default_rng(seed)
+    return generate_dense_set(n, rng, n_range, log10_kappa_range=(1, 4))
+
+
+# ---------------------------------------------------------------------------
+# Validation + routing
+# ---------------------------------------------------------------------------
+
+def test_validation_rejects_bad_payloads(front_door):
+    url = front_door.url
+    sys0 = _systems(1)[0]
+
+    code, body, _ = _http("POST", url + "/v1/solve", raw=b"not json")
+    assert code == 400 and "JSON" in body["error"]
+
+    bad = [
+        {"A": sys0.A[:, :-1].tolist(), "b": sys0.b.tolist()},   # not square
+        {"A": sys0.A.tolist(), "b": sys0.b[:-1].tolist()},      # b mismatch
+        {"A": (sys0.A * np.nan).tolist(), "b": sys0.b.tolist()},
+        {"A": sys0.A.tolist(), "b": sys0.b.tolist(), "oops": 1},
+        {"A": sys0.A.tolist(), "b": sys0.b.tolist(),
+         "x_true": sys0.x_true[:-1].tolist()},                  # len mismatch
+        {"A": sys0.A.tolist(), "b": sys0.b.tolist(),
+         "request_id": 17},                                     # non-string
+        {"b": sys0.b.tolist()},                                 # A missing
+        [1, 2, 3],                                              # not an object
+    ]
+    for payload in bad:
+        code, body, _ = _http("POST", url + "/v1/solve", payload)
+        assert code == 400, (payload, body)
+        assert "error" in body
+
+    big = np.eye(128)
+    code, body, _ = _http("POST", url + "/v1/solve",
+                          {"A": big.tolist(), "b": big[0].tolist()})
+    assert code == 400 and "exceeds" in body["error"]
+
+
+def test_unknown_routes_and_methods(front_door):
+    url = front_door.url
+    code, body, _ = _http("GET", url + "/nope")
+    assert code == 404
+    code, body, _ = _http("GET", url + "/v1/solve")
+    assert code == 405
+    code, body, _ = _http("POST", url + "/v1/policy")
+    assert code == 405
+    code, body, _ = _http("GET", url + "/v1/result/abc")
+    assert code == 400
+
+
+# ---------------------------------------------------------------------------
+# Solve round-trips
+# ---------------------------------------------------------------------------
+
+def test_async_solve_roundtrip_exactly_once(front_door):
+    url = front_door.url
+    sys0 = _systems(1)[0]
+    code, body, headers = _http("POST", url + "/v1/solve",
+                                _payload(sys0, request_id="req-abc-1"))
+    assert code == 202, body
+    assert body["status"] == "queued"
+    assert body["client_request_id"] == "req-abc-1"
+    assert headers["X-Request-Id"] == "req-abc-1"
+    rid = body["request_id"]
+    assert isinstance(rid, int) and body["bucket"] in (16, 32)
+
+    result = _await_result(url, rid)
+    assert result["status"] == "done"
+    assert result["request_id"] == rid
+    assert result["client_request_id"] == "req-abc-1"
+    assert result["policy_version"] == "v0001"
+    assert isinstance(result["action_names"], list)
+    assert result["outcome"]["status"] in (0, 1, 2, 3)
+    assert result["has_x_true"] is True
+    # Retrieval evicts: the id is gone afterwards.
+    code, body, _ = _http("GET", f"{url}/v1/result/{rid}")
+    assert code == 404
+
+
+def test_sync_solve_and_missing_x_true(front_door):
+    url = front_door.url
+    sys0 = _systems(2, seed=12)[0]
+    code, body, _ = _http("POST", url + "/v1/solve:sync", _payload(sys0))
+    assert code == 200, body
+    assert body["status"] == "done"
+    assert "reward" in body and "eps" in body and "latency_s" in body
+
+    code, body, _ = _http("POST", url + "/v1/solve:sync",
+                          _payload(sys0, x_true=False))
+    assert code == 200, body
+    assert body["has_x_true"] is False
+
+
+def test_sync_timeout_result_stays_retrievable(http_root):
+    srv = AutotuneServer(PolicyRegistry(http_root), IR, W1, BCFG,
+                         OnlineConfig(), seed=0, obs=False)
+    fd = serve_http(srv, cfg=HttpConfig(max_n=64, sync_timeout_s=0.001,
+                                        flush_interval_s=0.002))
+    try:
+        sys0 = _systems(1, seed=13)[0]
+        code, body, _ = _http("POST", fd.url + "/v1/solve:sync",
+                              _payload(sys0))
+        assert code == 504, body
+        assert body["status"] == "pending"
+        result = _await_result(fd.url, body["request_id"])
+        assert result["status"] == "done"
+    finally:
+        fd.close()
+
+
+def test_policy_endpoint(front_door):
+    code, body, _ = _http("GET", front_door.url + "/v1/policy")
+    assert code == 200
+    assert body["current"] == "v0001"
+    assert body["policy_version"] == "v0001"
+    assert body["versions"] == ["v0001"]
+    assert body["history"] == ["v0001"]
+    assert "rollout" not in body          # plain AutotuneServer
+
+
+# ---------------------------------------------------------------------------
+# Backpressure (acceptance): bounded queue, 429s, exactly-once answers
+# ---------------------------------------------------------------------------
+
+def test_backpressure_burst_bounded_and_exactly_once(http_root):
+    srv = AutotuneServer(PolicyRegistry(http_root), IR, W1, BCFG,
+                         OnlineConfig(), seed=0, obs=False)
+    cfg = HttpConfig(max_n=64, max_queue_depth=3, flush_interval_s=0.05,
+                     retry_after_s=2.0)
+    fd = serve_http(srv, cfg=cfg)
+    try:
+        url = fd.url
+        # Warm the bucket (first solve pays the XLA compile).
+        warm = _systems(1, seed=14, n_range=(16, 16))[0]
+        code, _, _ = _http("POST", url + "/v1/solve:sync", _payload(warm))
+        assert code == 200
+
+        burst = _systems(18, seed=15, n_range=(16, 16))
+        out, lock = [], threading.Lock()
+
+        def fire(system):
+            code, body, headers = _http("POST", url + "/v1/solve",
+                                        _payload(system))
+            with lock:
+                out.append((code, body, headers))
+
+        threads = [threading.Thread(target=fire, args=(s,)) for s in burst]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+        codes = [c for c, _, _ in out]
+        assert len(out) == len(burst)
+        assert set(codes) <= {202, 429}
+        accepted = [b["request_id"] for c, b, _ in out if c == 202]
+        rejected = [(b, h) for c, b, h in out if c == 429]
+        assert rejected, "overload burst produced no 429s"
+        assert len(accepted) + len(rejected) == len(burst)
+        # Admission is bounded per bucket: never more in flight than the
+        # cap plus what the pump already answered into the done store.
+        assert len(set(accepted)) == len(accepted)
+        for _, headers in rejected:
+            assert int(headers["Retry-After"]) >= 1
+
+        # No accepted request is lost, none is answered twice.
+        for rid in accepted:
+            result = _await_result(url, rid)
+            assert result["request_id"] == rid
+            code, _, _ = _http("GET", f"{url}/v1/result/{rid}")
+            assert code == 404
+        assert fd.queue_depth(16) == 0
+    finally:
+        fd.close()
+
+
+# ---------------------------------------------------------------------------
+# Drain + shutdown
+# ---------------------------------------------------------------------------
+
+def test_graceful_drain_answers_admitted_requests(http_root):
+    srv = AutotuneServer(PolicyRegistry(http_root), IR, W1, BCFG,
+                         OnlineConfig(), seed=0, obs=False)
+    fd = serve_http(srv, cfg=HttpConfig(max_n=64, flush_interval_s=10.0))
+    rids = []
+    for system in _systems(4, seed=16):
+        code, body, _ = _http("POST", fd.url + "/v1/solve",
+                              _payload(system))
+        assert code == 202
+        rids.append(body["request_id"])
+    # The flush tick is far away: close() itself must drain and answer.
+    fd.close()
+    assert srv.pending == 0
+    assert not fd._pending
+    for rid in rids:
+        assert fd._done[rid]["status"] == "done"
+
+
+def test_draining_rejects_new_work(front_door):
+    sys0 = _systems(1, seed=17)[0]
+    front_door._draining = True
+    try:
+        code, body, _ = _http("POST", front_door.url + "/v1/solve",
+                              _payload(sys0))
+        assert code == 503
+    finally:
+        front_door._draining = False
+    code, _, _ = _http("POST", front_door.url + "/v1/solve:sync",
+                       _payload(sys0))
+    assert code == 200

@@ -253,6 +253,35 @@ def test_trajectory_log_roundtrip_and_corruption_tolerance(tmp_path):
         {"task": "b", "reward": 2.0, "request_id": 1}]
 
 
+def test_trajectory_log_rotates_on_size(tmp_path):
+    path = str(tmp_path / "traj.jsonl")
+    with TrajectoryLog(path, max_bytes=200, max_segments=2) as log:
+        for i in range(40):
+            log.append({"request_id": i, "task": "t"})
+        assert log.rotations >= 2
+    segs = TrajectoryLog.segments(path)
+    assert segs[-1] == path                   # active file is newest
+    assert len(segs) <= 3                     # .2, .1 + active
+    for seg in segs:                          # bounded: limit + 1 record
+        assert os.path.getsize(seg) <= 200 + 64
+    # Readers span the live segments oldest-first: ids stay ordered, the
+    # newest record survives, the oldest were rotated out and deleted.
+    ids = [r["request_id"] for r in TrajectoryLog.read(path)]
+    assert ids == sorted(ids)
+    assert ids[-1] == 39
+    assert 0 < len(ids) < 40
+
+
+def test_trajectory_log_without_limit_never_rotates(tmp_path):
+    path = str(tmp_path / "traj.jsonl")
+    with TrajectoryLog(path) as log:
+        for i in range(200):
+            log.append({"request_id": i})
+        assert log.rotations == 0
+    assert TrajectoryLog.segments(path) == [path]
+    assert len(TrajectoryLog.read(path)) == 200
+
+
 # ---------------------------------------------------------------------------
 # Telemetry satellites: throughput anchor, per-bucket reservoirs
 # ---------------------------------------------------------------------------

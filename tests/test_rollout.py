@@ -1,0 +1,397 @@
+"""Shadow/canary rollout controller: deterministic routing + shadow
+mirroring, gate evaluation against snapshot-meta baselines, automatic
+rollback of a degraded candidate and promotion of a healthy one, and
+the end-to-end HTTP acceptance path (primary slice bit-identical to the
+in-process `AutotuneServer`)."""
+import json
+import shutil
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import GMRESIREnv, TrainConfig, W1, reduced_action_space
+from repro.data import generate_dense_set
+from repro.obs import MetricsRegistry, Observability
+from repro.service import (AutotuneServer, BatcherConfig, OnlineConfig,
+                           PolicyRegistry, RolloutConfig, ShadowServer)
+from repro.service.http import HttpConfig, serve_http
+from repro.solvers import IRConfig
+
+SPACE = reduced_action_space()
+IR = IRConfig(tau=1e-6)
+BCFG = BatcherConfig(max_batch=4, max_wait_s=0.002, bucket_step=16,
+                     min_bucket=16)
+# Gates sized for the tiny test stream (under the x64 numerics the
+# conftest pins). The degraded candidate is pinned to the all-bf16 arm
+# (see _publish_degraded): bf16 residuals cannot reach tau=1e-6, so it
+# stagnates — measured pass ~0.07-0.08 and reward EWMA ~-1.5..-0.5 on
+# this kappa 1e3..1e6 stream, vs pass ~0.6-0.75 and reward ~9-14 for
+# the trained policy. Both the absolute pass-rate floor (0.12) and the
+# reward margin trip on it while a healthy copy clears both. The
+# latency bound is slack (CI latency is noisy and not what these tests
+# pin); each gate is also exercised deterministically against
+# synthetic telemetry in test_gate_evaluation_unit.
+RCFG = RolloutConfig(canary_frac=0.3, shadow=True, decision_window=24,
+                     min_samples=20, promote_windows=2,
+                     reward_margin=10.0, pass_rate_floor=0.12,
+                     pass_rate_margin=0.9, p99_bound=50.0,
+                     min_bucket_samples=4, seed=0)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _requests(n, seed, n_range=(12, 28)):
+    rng = np.random.default_rng(seed)
+    return generate_dense_set(n, rng, n_range, log10_kappa_range=(3, 6))
+
+
+@pytest.fixture(scope="module")
+def rollout_root(tmp_path_factory):
+    """Warm-started registry whose CURRENT snapshot carries telemetry
+    evidence in its meta (the gate baselines), produced the way
+    production would: serve traffic, then `snapshot()`."""
+    root = str(tmp_path_factory.mktemp("rollreg") / "reg")
+    rng = np.random.default_rng(7)
+    train = generate_dense_set(8, rng, n_range=(12, 28),
+                               log10_kappa_range=(3, 6))
+    env = GMRESIREnv(train, SPACE, IR, chunk=4, bucket_step=16)
+    PolicyRegistry.warm_start(root, env, W1, TrainConfig(episodes=6))
+    srv = AutotuneServer(PolicyRegistry(root), IR, W1, BCFG,
+                         OnlineConfig(), seed=0, obs=False)
+    for system in _requests(40, seed=3):
+        srv.submit(system)
+    srv.drain()
+    srv.snapshot(note="baseline with telemetry evidence")
+    return root
+
+
+def _fork(root, tmp_path):
+    """Private copy of the shared registry (tests mutate CURRENT)."""
+    dst = str(tmp_path / "reg")
+    shutil.copytree(root, dst)
+    return PolicyRegistry(dst)
+
+
+def _publish_degraded(reg):
+    """Candidate pinned to action 0 — all-bf16 on every step, residuals
+    included, so solves stagnate short of tau and the pass rate
+    collapses. (Merely zeroing Q would NOT degrade anything: `greedy`
+    breaks ties toward the highest action index, i.e. the safe
+    all-fp64 arm.)"""
+    pol = reg.load()
+    pol.qtable.Q[:] = 0.0
+    pol.qtable.Q[:, 0] = 1.0
+    return reg.publish(pol, note="degraded: pinned to all-bf16")
+
+
+def _publish_healthy(reg):
+    return reg.publish(reg.load(), note="healthy: copy of baseline")
+
+
+def _shadow(reg, clock=None, obs=False, rollout_cfg=RCFG, seed=0,
+            decision_log_path=None):
+    return ShadowServer(reg, IR, W1, BCFG, OnlineConfig(),
+                        rollout_cfg=rollout_cfg,
+                        clock=clock or FakeClock(), seed=seed, obs=obs,
+                        decision_log_path=decision_log_path)
+
+
+# ---------------------------------------------------------------------------
+# Routing + shadow mirroring
+# ---------------------------------------------------------------------------
+
+def test_canary_routing_and_shadow_mirror(rollout_root, tmp_path):
+    reg = _fork(rollout_root, tmp_path)
+    baseline = reg.current_version()
+    cfg = RolloutConfig(canary_frac=0.5, shadow=True,
+                        decision_window=10**9, min_samples=10**9)
+    shadow = _shadow(reg, rollout_cfg=cfg)
+    cand = _publish_healthy(reg)
+    shadow.start_rollout(cand)
+    assert reg.current_version() == cand       # promote-at-start staging
+
+    reqs = _requests(14, seed=5)
+    rids = [shadow.submit(s) for s in reqs]
+    shadow.drain()
+    resps = {rid: shadow.poll(rid) for rid in rids}
+    assert all(r is not None for r in resps.values())
+    # Exactly-once retrieval.
+    assert all(shadow.poll(rid) is None for rid in rids)
+
+    primary = [r for r in resps.values() if r.policy_version == baseline]
+    canary = [r for r in resps.values() if r.policy_version == cand]
+    assert len(primary) + len(canary) == len(reqs)
+    assert primary and canary                  # both slices took traffic
+    # Shadow evaluation: the candidate solved its canary slice AND a
+    # mirror of every primary-slice request, but only canary responses
+    # were client-visible.
+    assert shadow.candidate.telemetry.responses == len(reqs)
+    state = shadow.rollout_state()
+    assert state["phase"] == "canary" and state["active"]
+    assert state["candidate_version"] == cand
+    assert state["baseline_version"] == baseline
+
+
+def test_routing_is_deterministic_per_seed(rollout_root, tmp_path):
+    reqs = _requests(10, seed=11)
+
+    def routes(tag):
+        reg = _fork(rollout_root, tmp_path / tag)
+        shadow = _shadow(reg, rollout_cfg=RCFG)
+        shadow.start_rollout(_publish_healthy(reg))
+        rids = [shadow.submit(s) for s in reqs]
+        shadow.drain()
+        return [shadow.poll(r).policy_version for r in rids]
+
+    assert routes("a") == routes("b")
+
+
+def test_gate_evaluation_unit(rollout_root, tmp_path):
+    """Deterministic gate coverage with synthetic candidate telemetry:
+    each hard floor (reward EWMA, pass rate, per-bucket p99) trips on
+    exactly the evidence it reads."""
+    reg = _fork(rollout_root, tmp_path)
+    cfg = RolloutConfig(canary_frac=0.0, shadow=True,
+                        decision_window=10**9, min_samples=4,
+                        promote_windows=1, reward_margin=0.5,
+                        pass_rate_floor=0.5, pass_rate_margin=0.25,
+                        p99_bound=2.0, min_bucket_samples=2, seed=0)
+    shadow = _shadow(reg, rollout_cfg=cfg)
+    shadow.start_rollout(_publish_healthy(reg))
+    shadow._baseline_tel = {"reward_ewma": 5.0, "converged_frac": 0.9,
+                            "latency_s_per_bucket": {"16": {"p99": 0.01}}}
+    tel = shadow.candidate.telemetry
+
+    # Below min_samples: hold, no verdict on the other gates.
+    d = shadow._evaluate_gates()
+    assert d.outcome == "hold" and d.failures == ["min_samples"]
+
+    # Healthy window: reward near baseline, all converged, fast.
+    for i in range(8):
+        tel.on_response(0.005, ("fp32",), 0, 4.8, now=float(i),
+                        bucket=16, status=0)
+    d = shadow._evaluate_gates()
+    assert d.outcome == "promote" and not d.failures
+    assert d.evidence["baseline_source"] == "snapshot_meta"
+    assert d.evidence["pass_rate"]["floor"] == 0.65    # 0.9 - 0.25
+
+    # Reward collapse: EWMA sinks below baseline - margin; pass rate
+    # still fine, so the reward gate is the only failure.
+    for i in range(8):
+        tel.on_response(0.005, ("fp32",), 0, 0.0, now=float(8 + i),
+                        bucket=16, status=0)
+    d = shadow._evaluate_gates()
+    assert d.outcome == "rollback" and d.failures == ["reward_ewma"]
+
+    # Outcome failures + latency blowup: pass rate drops under the
+    # floor and bucket-16 p99 exceeds bound * baseline p99.
+    for i in range(10):
+        tel.on_response(1.0, ("fp32",), 0, 4.8, now=float(16 + i),
+                        bucket=16, status=3)
+    d = shadow._evaluate_gates()
+    assert d.outcome == "rollback"
+    assert "pass_rate" in d.failures and "p99_bucket_16" in d.failures
+    assert d.evidence["p99_per_bucket"]["16"]["baseline"] == 0.01
+
+
+# ---------------------------------------------------------------------------
+# Gate decisions: degraded rolls back, healthy promotes
+# ---------------------------------------------------------------------------
+
+def test_degraded_candidate_auto_rolls_back(rollout_root, tmp_path):
+    reg = _fork(rollout_root, tmp_path)
+    baseline = reg.current_version()
+    log_path = str(tmp_path / "decisions.jsonl")
+    obs = Observability(registry=MetricsRegistry())
+    shadow = _shadow(reg, obs=obs, decision_log_path=log_path)
+    vbad = _publish_degraded(reg)
+    shadow.start_rollout(vbad)
+    assert reg.current_version() == vbad
+
+    reqs = _requests(48, seed=9)
+    rids = []
+    for system in reqs:
+        rids.append(shadow.submit(system))
+        shadow.step()
+        if shadow.phase != "canary":
+            break
+    shadow.drain()
+    assert shadow.phase == "rolled_back"
+    assert reg.current_version() == baseline
+    # The axe fell within (a small multiple of) one decision window.
+    last = shadow.decisions[-1]
+    assert last.outcome == "rollback"
+    assert last.responses <= 3 * RCFG.decision_window
+    assert last.failures                        # names the failed gates
+    assert last.evidence["baseline_source"] == "snapshot_meta"
+
+    # Decision-trail JSONL: start + the rollback decision + transition.
+    events = [json.loads(ln) for ln in open(log_path) if ln.strip()]
+    kinds = [e["event"] for e in events]
+    assert kinds[0] == "start"
+    assert "decision" in kinds and "rollback" in kinds
+    decision = next(e for e in events if e["event"] == "decision"
+                    and e["outcome"] == "rollback")
+    assert decision["candidate"] == vbad
+    assert decision["failures"]
+
+    # rollout_decisions_total{outcome} counted.
+    fam = {k: c.value for k, c in
+           obs.registry.counter(
+               "repro_rollout_decisions_total",
+               "Canary gate decisions, by outcome.",
+               ("task", "outcome"))._children.items()}
+    assert any(k[1] == "rollback" and v >= 1 for k, v in fam.items())
+
+    # In-flight canary requests still answer after the rollback.
+    resps = [shadow.poll(rid) for rid in rids]
+    assert all(r is not None for r in resps)
+
+
+def test_healthy_candidate_auto_promotes(rollout_root, tmp_path):
+    reg = _fork(rollout_root, tmp_path)
+    shadow = _shadow(reg)
+    vgood = _publish_healthy(reg)
+    shadow.start_rollout(vgood)
+
+    for system in _requests(60, seed=9):       # the same stream
+        shadow.submit(system)
+        shadow.step()
+        if shadow.phase != "canary":
+            break
+    shadow.drain()
+    assert shadow.phase == "promoted"
+    assert reg.current_version() == vgood
+    outcomes = [d.outcome for d in shadow.decisions]
+    assert outcomes[-1] == "promote"
+    assert outcomes.count("hold") >= RCFG.promote_windows - 1
+
+    # The candidate now fronts all traffic.
+    assert shadow.policy_version == vgood
+    post = [shadow.submit(s) for s in _requests(6, seed=13)]
+    shadow.drain()
+    for rid in post:
+        resp = shadow.poll(rid)
+        assert resp is not None and resp.policy_version == vgood
+
+
+def test_rollout_rejects_concurrent_start(rollout_root, tmp_path):
+    reg = _fork(rollout_root, tmp_path)
+    shadow = _shadow(reg)
+    shadow.start_rollout(_publish_healthy(reg))
+    with pytest.raises(RuntimeError):
+        shadow.start_rollout(_publish_healthy(reg))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end over HTTP (acceptance)
+# ---------------------------------------------------------------------------
+
+def _http(method, url, payload=None, timeout=60):
+    data = (json.dumps(payload).encode("utf-8")
+            if payload is not None else None)
+    req = urllib.request.Request(
+        url, data=data, method=method,
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, json.loads(r.read().decode("utf-8"))
+    except urllib.error.HTTPError as e:
+        body = e.read().decode("utf-8")
+        return e.code, (json.loads(body) if body else {})
+
+
+def _solve_payload(system):
+    return {"A": system.A.tolist(), "b": system.b.tolist(),
+            "x_true": system.x_true.tolist()}
+
+
+def test_http_rollout_rolls_back_and_primary_slice_is_bit_identical(
+        rollout_root, tmp_path):
+    reg = _fork(rollout_root, tmp_path)
+    baseline = reg.current_version()
+    shadow = ShadowServer(reg, IR, W1, BCFG, OnlineConfig(),
+                          rollout_cfg=RCFG, seed=0, obs=False)
+    vbad = _publish_degraded(reg)
+    shadow.start_rollout(vbad)
+    fd = serve_http(shadow, cfg=HttpConfig(max_n=64,
+                                           flush_interval_s=0.002))
+    reqs = _requests(30, seed=21)              # mixed buckets: 16 and 32
+    results = []
+    try:
+        for system in reqs:
+            code, body = _http("POST", fd.url + "/v1/solve:sync",
+                               _solve_payload(system))
+            assert code == 200, body
+            results.append(body)
+            if shadow.phase != "canary":
+                break
+        # Controller decided without any explicit step() from us: the
+        # background flush loop is the only pump.
+        assert shadow.phase == "rolled_back"
+        assert reg.current_version() == baseline
+        code, pol = _http("GET", fd.url + "/v1/policy")
+        assert code == 200
+        assert pol["current"] == baseline
+        assert pol["rollout"]["phase"] == "rolled_back"
+        assert vbad in pol["versions"]
+    finally:
+        fd.close()
+
+    # Primary-slice responses are bit-identical to a fresh in-process
+    # AutotuneServer fed only the primary-slice subset (same seed, same
+    # per-request flush cadence the sequential sync path produced).
+    primary_idx = [i for i, r in enumerate(results)
+                   if r["policy_version"] == baseline]
+    assert primary_idx                          # slice took traffic
+    ref = AutotuneServer(reg, IR, W1, BCFG, OnlineConfig(), seed=0,
+                         obs=False)
+    assert ref.policy_version == baseline       # rollback restored it
+    for i in primary_idx:
+        rid = ref.submit(reqs[i])
+        ref.drain()
+        want = ref.poll(rid)
+        got = results[i]
+        assert got["action"] == want.action
+        assert got["state"] == want.state
+        assert got["eps"] == want.eps
+        assert got["action_names"] == list(want.action_names)
+        assert got["outcome"]["status"] == want.record.status
+        a, b = got["reward"], want.reward
+        assert (a == b) or (not np.isfinite(a) and not np.isfinite(b))
+        a, b = got["outcome"]["ferr"], float(want.record.ferr)
+        assert (a == b) or (not np.isfinite(a) and not np.isfinite(b))
+
+
+def test_http_rollout_promotes_healthy_candidate(rollout_root, tmp_path):
+    reg = _fork(rollout_root, tmp_path)
+    shadow = ShadowServer(reg, IR, W1, BCFG, OnlineConfig(),
+                          rollout_cfg=RCFG, seed=0, obs=False)
+    vgood = _publish_healthy(reg)
+    shadow.start_rollout(vgood)
+    fd = serve_http(shadow, cfg=HttpConfig(max_n=64,
+                                           flush_interval_s=0.002))
+    try:
+        for system in _requests(60, seed=21):  # the same stream
+            code, body = _http("POST", fd.url + "/v1/solve:sync",
+                               _solve_payload(system))
+            assert code == 200, body
+            if shadow.phase != "canary":
+                break
+        assert shadow.phase == "promoted"
+        assert reg.current_version() == vgood
+        code, pol = _http("GET", fd.url + "/v1/policy")
+        assert code == 200 and pol["rollout"]["phase"] == "promoted"
+        # Post-promotion traffic is answered by the promoted policy.
+        code, body = _http("POST", fd.url + "/v1/solve:sync",
+                           _solve_payload(_requests(1, seed=33)[0]))
+        assert code == 200 and body["policy_version"] == vgood
+    finally:
+        fd.close()

@@ -246,6 +246,80 @@ def test_registry_consecutive_rollbacks_walk_back(tmp_path):
         reg.rollback()                   # nothing before v1
 
 
+def test_registry_rollback_with_single_entry_history(tmp_path):
+    reg = PolicyRegistry(str(tmp_path / "reg"))
+    v1 = reg.publish(_tiny_policy(1))
+    reg.promote(v1)
+    with pytest.raises(RuntimeError):
+        reg.rollback()                   # no prior version exists
+    # The failed rollback left the registry untouched.
+    assert reg.current_version() == v1
+    assert reg.history() == [v1]
+
+
+def test_registry_promote_unknown_version_is_atomic(tmp_path):
+    reg = PolicyRegistry(str(tmp_path / "reg"))
+    v1 = reg.publish(_tiny_policy(1))
+    reg.promote(v1)
+    with pytest.raises(ValueError):
+        reg.promote("v9999")
+    assert reg.current_version() == v1   # CURRENT did not move
+    assert reg.history() == [v1]         # no phantom HISTORY entry
+
+
+def test_registry_concurrent_publish_and_promote(tmp_path):
+    from concurrent.futures import ThreadPoolExecutor
+
+    reg = PolicyRegistry(str(tmp_path / "reg"))
+    pols = {i: _tiny_policy(i) for i in range(8)}
+    with ThreadPoolExecutor(max_workers=8) as ex:
+        out = list(ex.map(
+            lambda i: reg.publish(pols[i], note=f"w{i}"), range(8)))
+    # Every publisher got a distinct version directory (the atomic mkdir
+    # claim), and each snapshot is intact and loadable.
+    assert len(set(out)) == 8
+    assert reg.versions() == sorted(out)
+    for i, v in enumerate(out):
+        assert np.array_equal(reg.load(v).qtable.Q, pols[i].qtable.Q)
+        assert reg.meta(v)["note"] == f"w{i}"
+    # Concurrent promotes: CURRENT ends on one of the contenders and
+    # never a torn value (atomic os.replace under the registry lock).
+    with ThreadPoolExecutor(max_workers=2) as ex:
+        list(ex.map(reg.promote, out[:2]))
+    assert reg.current_version() in out[:2]
+    assert set(reg.history()) == set(out[:2])
+
+
+def test_server_bounds_unclaimed_responses(tmp_path):
+    from repro.obs import MetricsRegistry, Observability
+
+    rng = np.random.default_rng(3)
+    train = generate_dense_set(4, rng, n_range=(16, 16),
+                               log10_kappa_range=(1, 4))
+    env = GMRESIREnv(train, SPACE, IR, chunk=4, bucket_step=16)
+    reg, _, _ = PolicyRegistry.warm_start(
+        str(tmp_path / "reg"), env, W1, TrainConfig(episodes=1))
+    obs = Observability(registry=MetricsRegistry())
+    srv = AutotuneServer(
+        reg, IR, W1,
+        BatcherConfig(max_batch=4, max_wait_s=0.005, bucket_step=16,
+                      min_bucket=16),
+        OnlineConfig(), max_retained_responses=2, obs=obs)
+    reqs = generate_dense_set(6, rng, n_range=(16, 16),
+                              log10_kappa_range=(1, 4))
+    ids = [srv.submit(s) for s in reqs]       # single bucket: FIFO order
+    srv.drain()
+    # A consumer that never polls cannot leak: only the newest 2
+    # unclaimed responses are retained, the overflow was evicted (and
+    # counted), and poll() keeps answering for what is retained.
+    assert srv.responses_evicted == 4
+    assert all(srv.poll(i) is None for i in ids[:4])
+    assert all(srv.poll(i) is not None for i in ids[4:])
+    fam = obs.registry.counter("repro_server_responses_evicted_total",
+                               "", ("task",))
+    assert sum(c.value for _, c in fam.samples()) == 4
+
+
 def test_qtable_save_load_without_npz_suffix(tmp_path):
     qt = QTable(3, 2, alpha=None, seed=5)
     qt.update(1, 0, 4.0)
@@ -349,3 +423,10 @@ def test_service_bench_emits_json_report(tmp_path, monkeypatch):
     assert ov["rps_on"] > 0 and ov["rps_off"] > 0
     assert ov["overhead_pct"] == pytest.approx(
         100.0 * (1.0 - ov["rps_on"] / ov["rps_off"]))
+    # HTTP front-door arm: the same trace fire-and-polled over the wire.
+    hf = report["http_front_door"]
+    assert hf["max_batch"] == 2
+    assert hf["n_requests"] == 10
+    assert hf["rps"] > 0 and hf["rps_inproc"] > 0
+    assert {"p50", "p90", "p99"} <= set(hf["latency_s"])
+    assert any(r.startswith("service/http_b2,") for r in rows)
