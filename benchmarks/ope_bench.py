@@ -1,0 +1,111 @@
+"""Off-policy evaluation throughput benchmark.
+
+Times `repro.eval.ope.evaluate_policy` (IPS + DM + DR, including the
+stratified bootstrap) over synthetic logged streams of several sizes,
+and the `ope_gate` end to end (two candidates scored against one
+shared reward model). OPE runs inside `start_rollout` on the serving
+path (DESIGN.md §10.3), so its wall-clock cost per logged record is an
+operational number, not a curiosity: it bounds how much log history a
+gate can afford to score at each candidate admission.
+
+CSV rows follow the `benchmarks/run.py` contract
+(name,us_per_call,derived — here us per logged record); the full
+report lands in benchmarks/results/ope_bench.json.
+
+    PYTHONPATH=src python benchmarks/ope_bench.py [--full] [--recompute]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __package__ in (None, ""):      # script entry: repo root onto sys.path
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+        __file__))))
+
+import time
+
+import numpy as np
+
+from benchmarks.common import load_report, save_report
+from repro.eval.ope import (CallableCandidate, OPEConfig, evaluate_policy,
+                            ope_gate)
+
+K = 8          # arms
+S = 32         # states
+EPS = 0.2
+
+SIZES = (1_000, 10_000)
+SIZES_FULL = (1_000, 10_000, 100_000)
+BOOTSTRAPS = (50, 200)
+
+
+def _records(n, seed=0):
+    rng = np.random.default_rng(seed)
+    r_table = rng.normal(0.0, 3.0, (S, K))
+    recs = []
+    for i in range(n):
+        s = int(rng.integers(S))
+        explore = bool(rng.random() < EPS)
+        a = int(rng.integers(K)) if explore else int(np.argmax(r_table[s]))
+        recs.append({"features": [float(s)], "state": s, "action": a,
+                     "eps": EPS, "explore": explore,
+                     "reward": float(r_table[s, a]
+                                     + 0.1 * rng.standard_normal()),
+                     "bucket": 16 * (1 + s % 4)})
+    return recs
+
+
+def _cand(offset, name):
+    return CallableCandidate(
+        lambda feats, state, o=offset: (int(state) + o) % K, name=name)
+
+
+def run(full=False):
+    report = {"sizes": {}}
+    for n in (SIZES_FULL if full else SIZES):
+        recs = _records(n)
+        row = {}
+        for nb in BOOTSTRAPS:
+            cfg = OPEConfig(n_bootstrap=nb, seed=0)
+            t0 = time.perf_counter()
+            ests = evaluate_policy(recs, _cand(1, "cand"), n_actions=K,
+                                   cfg=cfg)
+            dt = time.perf_counter() - t0
+            row[f"evaluate_b{nb}"] = {
+                "seconds": dt, "us_per_record": dt * 1e6 / n,
+                "dr": ests["dr"].value, "ess": ests["dr"].ess}
+        t0 = time.perf_counter()
+        rep = ope_gate(recs, _cand(0, "incumbent"), _cand(1, "cand"),
+                       n_actions=K, cfg=OPEConfig(n_bootstrap=200, seed=0))
+        dt = time.perf_counter() - t0
+        row["gate_b200"] = {"seconds": dt, "us_per_record": dt * 1e6 / n,
+                            "accept": rep.accept, "reason": rep.reason}
+        report["sizes"][str(n)] = row
+    return report
+
+
+def emit_csv(report):
+    rows = []
+    for n, row in report["sizes"].items():
+        for arm, d in row.items():
+            derived = ";".join(f"{k}={v}" for k, v in d.items()
+                               if k not in ("seconds", "us_per_record"))
+            rows.append(f"ope_bench/{arm}/n{n},"
+                        f"{d['us_per_record']:.2f},{derived}")
+    return rows
+
+
+def main(argv):
+    full = "--full" in argv
+    name = "ope_bench_full" if full else "ope_bench"
+    report = None if "--recompute" in argv else load_report(name)
+    if report is None:
+        report = run(full=full)
+        save_report(name, report)
+    for row in emit_csv(report):
+        print(row)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

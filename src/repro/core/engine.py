@@ -20,7 +20,7 @@ class, so the learning loop exists exactly once.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -68,6 +68,10 @@ class AutotuneEngine:
         self._rng = np.random.default_rng(seed)
         self._prepared: Dict[int, object] = {}   # instance idx -> rows
         self._cache: Dict[Tuple[int, int], Outcome] = {}
+        # Ad-hoc solve cache (trajectory replay, eval.replay): keyed by
+        # (id(instance), action) with the instance pinned alongside the
+        # outcome so the id can never be recycled while the entry lives.
+        self._adhoc: Dict[Tuple[int, int], Tuple[object, Outcome]] = {}
         self.n_solves = 0       # real solver rows (satellite: no pad rows)
         self.n_pad_solves = 0   # wasted rows from fixed-chunk padding
         self.n_requests = 0     # reward lookups
@@ -139,6 +143,46 @@ class AutotuneEngine:
         if (i, a) not in self._cache:
             self.solve_pairs([(i, a)])
         return self._cache[(i, a)]
+
+    def solve_adhoc(self, pairs: Sequence[Tuple[object, int]]
+                    ) -> List[Outcome]:
+        """Batch-solve (instance, action) pairs for instances *outside*
+        ``task.instances`` — the trajectory-replay path (`eval.replay`)
+        and any serving-style one-off. Same bucketed fixed-chunk route
+        as `solve_pairs` (one compiled executable per bucket; pad rows
+        counted), outcomes returned in input order and cached."""
+        miss: Dict[Tuple[int, int], Tuple[object, int]] = {}
+        for inst, a in pairs:
+            key = (id(inst), int(a))
+            if key not in self._adhoc and key not in miss:
+                miss[key] = (inst, int(a))
+        by_bucket: Dict[int, List[Tuple[Tuple[int, int],
+                                        Tuple[object, int]]]] = {}
+        for key, (inst, a) in miss.items():
+            bucket = self.task.bucket_key(inst)
+            by_bucket.setdefault(bucket, []).append((key, (inst, a)))
+        task_name = getattr(self.task, "name", "unknown")
+        for bucket, plist in sorted(by_bucket.items()):
+            chunk = self.executor.preferred_chunk(self.chunk, bucket)
+            _count("repro_engine_cache_misses_total",
+                   "Uncached (instance, action) pairs solved by the "
+                   "engine's solve cache.", len(plist),
+                   task=task_name, bucket=bucket)
+            for c0 in range(0, len(plist), chunk):
+                part = plist[c0:c0 + chunk]
+                outs = self.task.solve_rows(
+                    [self.task.prepare(inst) for _, (inst, _) in part],
+                    [self.action_space.actions[a] for _, (_, a) in part],
+                    chunk)
+                self.n_solves += len(part)
+                self.n_pad_solves += chunk - len(part)
+                for (key, (inst, _)), out in zip(part, outs):
+                    self._adhoc[key] = (inst, out)
+        return [self._adhoc[(id(inst), int(a))][1] for inst, a in pairs]
+
+    def outcome_for_instance(self, instance, action_idx: int) -> Outcome:
+        """Outcome of one ad-hoc (instance, action) solve (cached)."""
+        return self.solve_adhoc([(instance, int(action_idx))])[0]
 
     def reward_for(self, outcome: Outcome, action_idx: int, instance,
                    cfg=None) -> float:

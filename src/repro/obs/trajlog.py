@@ -140,3 +140,14 @@ class TrajectoryLog:
         if task is not None:
             recs = [r for r in recs if r.get("task") == task]
         return recs
+
+    @classmethod
+    def read_complete(cls, path: str, task: Optional[str] = None,
+                      fields: Optional[tuple] = None) -> List[dict]:
+        """Records carrying every required field (default: `FIELDS`,
+        the OPE schema). Foreign rows sharing a log file — decision-
+        trail events, hand-written annotations — are skipped, so the
+        off-policy evaluator can consume a mixed log safely."""
+        need = cls.FIELDS if fields is None else tuple(fields)
+        return [r for r in cls.read(path, task=task)
+                if all(f in r for f in need)]

@@ -16,7 +16,8 @@ from .instrument import (LearnerInstruments, RolloutInstruments,
 from .online import (DriftDetector, EpsilonController, OnlineConfig,
                      OnlineLearner, OnlineUpdate)
 from .registry import PolicyRegistry
-from .rollout import RolloutConfig, RolloutDecision, ShadowServer
+from .rollout import (OPEGateRejected, RolloutConfig, RolloutDecision,
+                      ShadowServer)
 from .server import AutotuneServer, SolveResponse
 from .telemetry import Ewma, Telemetry
 
@@ -24,7 +25,7 @@ __all__ = [
     "AutotuneServer", "BatcherConfig", "DriftDetector", "EpsilonController",
     "Ewma", "FlushResult", "LearnerInstruments", "MicroBatcher",
     "Observability", "OnlineConfig", "OnlineLearner", "OnlineUpdate",
-    "PolicyRegistry", "RolloutConfig", "RolloutDecision",
+    "OPEGateRejected", "PolicyRegistry", "RolloutConfig", "RolloutDecision",
     "RolloutInstruments", "ServiceInstruments", "ShadowServer",
     "SolveResponse", "Telemetry",
 ]

@@ -33,6 +33,17 @@ promotion and the candidate takes all traffic. Every decision is
 counted in ``repro_rollout_decisions_total{outcome}`` and appended to a
 decision-trail JSONL when ``decision_log_path`` is set.
 
+With ``ope_gate=True`` a candidate must additionally clear an
+*off-policy* gate before `start_rollout` admits it at all (DESIGN.md
+§10.3): its doubly-robust reward estimate over the logged trajectory
+stream (`eval.ope`, propensities reconstructed from the logged
+epsilon/explore fields) must have a lower confidence bound no worse
+than the incumbent's estimate minus ``ope_margin``. A refused
+candidate never takes a canary slice: `start_rollout` raises
+`OPEGateRejected`, the refusal is appended to the decision trail and
+counted as ``outcome="ope_reject"``, and the verdict (estimates, CIs)
+is annotated into the candidate version's registry meta.
+
 Single-threaded like everything in `service/`: routing, gating, and
 promotion all run on the caller's thread (the HTTP front door serializes
 through its worker).
@@ -71,17 +82,43 @@ class RolloutConfig:
     min_bucket_samples: int = 8   # p99 compared only for buckets with
                                   # this many candidate samples
     seed: int = 0                 # routing rng (deterministic slices)
+    # -- off-policy evaluation gate (eval.ope, DESIGN.md §10.3) --------
+    ope_gate: bool = False        # score candidates on the trajectory
+                                  # log before any canary traffic
+    ope_margin: float = 0.5       # candidate DR LCB must reach
+                                  # incumbent DR estimate - margin
+    ope_min_records: int = 64     # below this many logged records the
+                                  # gate abstains (canary gates rule)
+    ope_bootstrap: int = 200      # bootstrap resamples for the CI
+    ope_ci: float = 0.90          # two-sided CI coverage
+    ope_weight_clip: float = 100.0  # IPS/DR importance-weight cap
 
 
 @dataclasses.dataclass
 class RolloutDecision:
     outcome: str                  # "hold" | "promote" | "rollback"
+                                  # | "ope_accept" | "ope_reject"
     responses: int                # candidate responses at decision time
     windows_passed: int
     failures: List[str]
     evidence: Dict[str, object]
     candidate_version: str
     baseline_version: Optional[str]
+
+
+class OPEGateRejected(RuntimeError):
+    """Candidate refused a canary slice by the off-policy gate.
+
+    Carries the full `OPEGateReport` so callers (and the HTTP front
+    door's error payloads) can show the numbers the refusal rests on."""
+
+    def __init__(self, report):
+        self.report = report
+        lcb = (report.candidate["dr"].ci_lo
+               if report.candidate else None)
+        super().__init__(
+            f"candidate refused by OPE gate ({report.reason}): "
+            f"DR lower confidence bound {lcb} < floor {report.floor}")
 
 
 class ShadowServer:
@@ -175,13 +212,22 @@ class ShadowServer:
             self.candidate.auto_step = value
 
     # -- rollout lifecycle --------------------------------------------------
-    def start_rollout(self, version: str) -> None:
+    def start_rollout(self, version: str,
+                      trajectories: Optional[List[dict]] = None) -> None:
         """Promote `version` as the canary candidate and start routing a
         traffic slice to it; the prior CURRENT becomes the rollback
-        target and its snapshot meta the gate baseline."""
+        target and its snapshot meta the gate baseline.
+
+        With ``rollout_cfg.ope_gate`` the candidate is first scored
+        off-policy against the incumbent on `trajectories` (default:
+        this server's own trajectory log) and refused — no promotion,
+        no canary traffic — with `OPEGateRejected` if its DR lower
+        confidence bound misses the floor (DESIGN.md §10.3)."""
         if self.phase == "canary":
             raise RuntimeError("a rollout is already in flight")
         baseline = self.registry.current_version()
+        if self.rollout_cfg.ope_gate:
+            self._run_ope_gate(version, baseline, trajectories)
         policy = self.registry.load(version)
         self.registry.promote(version)      # rollback() now restores prior
         cand = AutotuneServer(
@@ -212,6 +258,61 @@ class ShadowServer:
                          "baseline": baseline,
                          "canary_frac": self.rollout_cfg.canary_frac,
                          "shadow": self.rollout_cfg.shadow})
+
+    # -- off-policy gate ----------------------------------------------------
+    def _logged_trajectories(self) -> List[dict]:
+        """Complete OPE-schema records from the primary's own trajectory
+        log (all live segments). Empty when the server runs without a
+        trajectory log — the gate then abstains via its
+        insufficient-records rule."""
+        obs = self.primary.obs
+        if obs is None or obs.trajlog is None:
+            return []
+        try:
+            return TrajectoryLog.read_complete(
+                obs.trajlog.path,
+                task=getattr(self.primary.task, "name", None))
+        except OSError:
+            return []
+
+    def _run_ope_gate(self, version: str, baseline: Optional[str],
+                      trajectories: Optional[List[dict]]) -> None:
+        """Score the candidate off-policy and raise `OPEGateRejected`
+        on refusal. Runs before `registry.promote`, so a refused
+        candidate never becomes CURRENT and never sees traffic."""
+        from repro.eval.ope import OPEConfig, SnapshotCandidate, ope_gate
+        cfg = self.rollout_cfg
+        records = (list(trajectories) if trajectories is not None
+                   else self._logged_trajectories())
+        cand = SnapshotCandidate.from_registry(self.registry, version)
+        inc = (SnapshotCandidate.from_registry(self.registry, baseline)
+               if baseline is not None else None)
+        report = ope_gate(
+            records, inc, cand, n_actions=cand.n_actions,
+            margin=cfg.ope_margin, min_records=cfg.ope_min_records,
+            cfg=OPEConfig(n_bootstrap=cfg.ope_bootstrap, ci=cfg.ope_ci,
+                          seed=cfg.seed, weight_clip=cfg.ope_weight_clip))
+        outcome = "ope_accept" if report.accept else "ope_reject"
+        event = report.to_event()
+        decision = RolloutDecision(
+            outcome=outcome, responses=0, windows_passed=0,
+            failures=([] if report.accept else [report.reason]),
+            evidence=event, candidate_version=version,
+            baseline_version=baseline)
+        self.decisions.append(decision)
+        self._decision_counts[outcome] = \
+            self._decision_counts.get(outcome, 0) + 1
+        if self._instr is not None:
+            self._instr.on_decision(outcome)
+        self._log_event({"event": "ope_gate", "outcome": outcome,
+                         "candidate": version, "baseline": baseline,
+                         "reason": report.reason, "gate": event})
+        try:                        # audit trail in the version's meta
+            self.registry.annotate(version, "ope_gate", event)
+        except Exception:
+            pass                    # fail-open: evidence, not control flow
+        if not report.accept:
+            raise OPEGateRejected(report)
 
     # -- request path -------------------------------------------------------
     def submit(self, instance) -> int:

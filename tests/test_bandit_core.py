@@ -196,6 +196,28 @@ def test_greedy_ties_break_to_highest_precision():
     assert qt.greedy(0) == 3          # tie -> higher index
 
 
+def test_zeroed_qtable_greedy_pins_to_all_fp64_arm():
+    """Regression pin for the all-zero-Q tie break on the real reduced
+    space: `greedy` resolves full-row ties toward the HIGHEST action
+    index, which Eq. 11's ordering makes the all-fp64 (safest) arm —
+    never the all-bf16 arm at index 0. Rollout/OPE test fixtures that
+    want a *degraded* candidate rely on this being stable: zeroing Q
+    alone degrades nothing, so they must pin ``Q[:, 0] = 1``.
+    """
+    space = reduced_action_space()
+    qt = QTable(6, space.n_actions, alpha=0.5, seed=0)
+    assert np.all(qt.Q == 0.0)
+    for s in range(qt.n_states):
+        a = qt.greedy(s)
+        assert a == space.n_actions - 1
+        assert space.names(a) == ("fp64",) * 4
+    assert space.names(0) == ("bf16",) * 4     # the degraded-fixture arm
+    # And the tie break is by index order, not by Q magnitude noise:
+    # raising any single arm wins that arm exactly.
+    qt.Q[2, 7] = 1e-9
+    assert qt.greedy(2) == 7
+
+
 def test_eps_greedy_distribution():
     qt = QTable(1, 4, alpha=0.5, seed=0)
     qt.update(0, 2, 5.0)

@@ -1,0 +1,169 @@
+"""Property-based tests of the core learning math (Discretizer binning,
+reward shape, online epsilon control).
+
+Uses `hypothesis` when installed; otherwise `tests/_hypothesis_stub.py`
+(registered by conftest) provides a deterministic boundary-inclusive
+sweep over the same strategy API, so these properties are exercised in
+every environment.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (Discretizer, RewardConfig, W1, accuracy_term,
+                        penalty_term, precision_term, reward)
+from repro.precision import FORMAT_ID
+from repro.service import OnlineConfig
+from repro.service.online import EpsilonController
+from repro.solvers.ir import CONVERGED, FAILED
+
+pytestmark = pytest.mark.fast
+
+FEATS = np.array([[0.0, -3.0], [2.5, 1.0], [10.0, 7.0]])
+DISC = Discretizer.fit(FEATS, (7, 4))
+
+
+# ---------------------------------------------------------------------------
+# Discretizer (Eq. 19-20)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(-1e9, 1e9), st.floats(-1e9, 1e9),
+       st.floats(0.0, 5.0), st.floats(0.0, 5.0))
+def test_prop_bin_mapping_is_componentwise_monotone(a, b, da, db):
+    """Growing any feature never decreases its bin index (the bins tile
+    an interval; clipping at the edges preserves monotonicity)."""
+    lo = DISC.bin_indices(np.array([a, b]))[0]
+    hi = DISC.bin_indices(np.array([a + da, b + db]))[0]
+    assert lo[0] <= hi[0] and lo[1] <= hi[1]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(allow_nan=False), st.floats(allow_nan=False))
+def test_prop_no_out_of_range_bins(a, b):
+    """Any finite (even astronomically out-of-range) feature vector maps
+    to a valid flat state — Eq. 19's clipping, with no exceptions."""
+    s = int(DISC(np.array([a, b])))
+    assert 0 <= s < DISC.n_states
+    idx = DISC.bin_indices(np.array([a, b]))[0]
+    assert all(0 <= idx[j] < DISC.n_bins[j] for j in range(DISC.d))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-1e6, 1e6), st.floats(-1e6, 1e6))
+def test_prop_degenerate_single_bin_features(x, q):
+    """A constant feature column (single training instance, or a
+    feature that never varies) maps every query to bin 0 instead of an
+    arbitrary floor() artifact."""
+    d = Discretizer.fit(np.array([[x, 0.0], [x, 4.0]]), (5, 2))
+    idx = d.bin_indices(np.array([q, 0.0]))[0]
+    assert idx[0] == 0                       # degenerate axis pins to 0
+    assert d.n_states == 10                  # state space is unchanged
+    s = int(d(np.array([q, 4.0])))
+    assert 0 <= s < d.n_states
+
+
+def test_single_bin_everywhere_is_one_state():
+    d = Discretizer.fit(FEATS, (1, 1))
+    assert d.n_states == 1
+    for v in ([-1e30, 1e30], [0.0, 0.0], [5.0, -5.0]):
+        assert int(d(np.array(v))) == 0
+
+
+# ---------------------------------------------------------------------------
+# Reward shape (Eq. 21-25)
+# ---------------------------------------------------------------------------
+
+ACT = np.full(4, FORMAT_ID["fp32"])
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 10**6), st.integers(0, 10**5),
+       st.floats(1.0, 1e12))
+def test_prop_reward_monotone_nonincreasing_in_cost(iters, extra, kappa):
+    """More solver iterations never pays more (penalty_term is
+    non-decreasing in cost; every other term is cost-independent)."""
+    cfg = RewardConfig()        # use_penalty=True
+    r_cheap = reward(1e-10, 1e-12, iters, CONVERGED, ACT, kappa, cfg)
+    r_dear = reward(1e-10, 1e-12, iters + extra, CONVERGED, ACT, kappa,
+                    cfg)
+    assert r_dear <= r_cheap
+    assert penalty_term(iters + extra) >= penalty_term(iters)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(1e-20, 1e10), st.floats(1e-20, 1e10),
+       st.integers(1, 10**4), st.floats(1.0, 1e12))
+def test_prop_reward_bounded_and_finite(ferr, nbe, iters, kappa):
+    """Converged rewards are finite and bounded by the per-term caps:
+    accuracy is theta-capped / eps-floored (Eq. 24), precision is at
+    most 4 * 53/8 (all-fp64 numerator at kappa -> 1), penalty >= 0."""
+    cfg = W1
+    r = reward(ferr, nbe, iters, CONVERGED, ACT, kappa, cfg)
+    assert np.isfinite(r)
+    acc_hi = -2.0 * cfg.C1 * np.log10(cfg.eps)
+    acc_lo = -2.0 * cfg.C1 * cfg.theta
+    prec_hi = 4 * 53.0 / 8.0
+    assert r <= cfg.w1 * acc_hi + cfg.w2 * prec_hi + 1e-9
+    assert r >= cfg.w1 * acc_lo - cfg.w3 * penalty_term(iters) - 1e-9
+    # Failure short-circuits every term to the flat fail reward.
+    assert reward(ferr, nbe, iters, FAILED, ACT, kappa, cfg) \
+        == cfg.fail_reward
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(1.0, 1e15), st.floats(1.0, 1e15))
+def test_prop_precision_term_damps_with_kappa(k1, k2):
+    lo, hi = sorted((k1, k2))
+    bf = np.full(4, FORMAT_ID["bf16"])
+    assert precision_term(bf, hi) <= precision_term(bf, lo) + 1e-12
+    assert precision_term(bf, lo) > 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(1e-18, 1e6), st.floats(1e-18, 1e6),
+       st.floats(1e-18, 1e6))
+def test_prop_accuracy_term_monotone_in_error(e1, e2, nbe):
+    lo, hi = sorted((e1, e2))
+    cfg = RewardConfig()
+    assert accuracy_term(hi, nbe, cfg) <= accuracy_term(lo, nbe, cfg) \
+        + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Online epsilon control (service.online)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2000), st.integers(1, 800))
+def test_prop_epsilon_decays_monotonically_to_floor(steps, decay):
+    cfg = OnlineConfig(eps0=0.10, eps_min=0.02, decay_updates=decay)
+    eps = EpsilonController(cfg)
+    prev = eps.value
+    assert prev == cfg.eps0
+    for _ in range(steps):
+        eps.step()
+        cur = eps.value
+        assert cur <= prev + 1e-12           # never re-opens on its own
+        assert cfg.eps_min <= cur <= cfg.eps0
+        prev = cur
+    if steps >= decay:
+        # Floor reached (up to anneal-arithmetic rounding), stays there.
+        assert eps.value == pytest.approx(cfg.eps_min, abs=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_prop_epsilon_boost_reopens_then_reanneals(steps):
+    cfg = OnlineConfig(eps0=0.10, eps_min=0.02, eps_boost=0.5,
+                       decay_updates=100)
+    eps = EpsilonController(cfg)
+    for _ in range(steps):
+        eps.step()
+    eps.boost()
+    assert eps.value == cfg.eps_boost        # drift re-opens exploration
+    for _ in range(cfg.decay_updates):
+        eps.step()
+    # Re-anneals to the floor (up to anneal-arithmetic rounding).
+    assert eps.value == pytest.approx(cfg.eps_min, abs=1e-12)

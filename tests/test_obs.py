@@ -282,6 +282,89 @@ def test_trajectory_log_without_limit_never_rotates(tmp_path):
     assert len(TrajectoryLog.read(path)) == 200
 
 
+def test_trajectory_log_truncation_at_segment_boundary(tmp_path):
+    """A rotated segment whose tail was torn mid-record (crash during
+    rotation, disk-full) loses exactly that record: the reader keeps
+    every complete line in that segment and everything in the segments
+    around it."""
+    path = str(tmp_path / "traj.jsonl")
+    with TrajectoryLog(path, max_bytes=120, max_segments=4) as log:
+        for i in range(20):
+            log.append({"request_id": i, "task": "t"})
+        assert log.rotations >= 2
+    segs = TrajectoryLog.segments(path)
+    assert len(segs) >= 3
+    victim = segs[1]                           # a middle rotated segment
+    before = [json.loads(ln) for ln in open(victim) if ln.strip()]
+    with open(victim, "rb+") as f:
+        f.truncate(os.path.getsize(victim) - 7)   # tear the last record
+    recs = list(TrajectoryLog.iter_records(path))
+    ids = [r["request_id"] for r in recs]
+    assert before[-1]["request_id"] not in ids    # torn record dropped
+    for r in before[:-1]:                         # rest of segment kept
+        assert r["request_id"] in ids
+    assert ids == sorted(ids)                     # ordering undisturbed
+
+
+def test_trajectory_log_iter_records_ordering_across_segments(tmp_path):
+    """iter_records yields exactly the surviving append order — oldest
+    rotated segment first, active file last, no interleaving."""
+    path = str(tmp_path / "traj.jsonl")
+    with TrajectoryLog(path, max_bytes=150, max_segments=3) as log:
+        for i in range(30):
+            log.append({"request_id": i})
+    per_seg = [[json.loads(ln)["request_id"] for ln in open(seg)
+                if ln.strip()]
+               for seg in TrajectoryLog.segments(path)]
+    flat = [i for seg in per_seg for i in seg]
+    assert [r["request_id"]
+            for r in TrajectoryLog.iter_records(path)] == flat
+    assert flat == sorted(flat)                # oldest-first, contiguous
+    assert flat[-1] == 29
+
+
+def test_trajectory_log_append_after_rotation_keeps_ordering(tmp_path):
+    """Appends after a rotation land in the fresh active file and read
+    back *after* everything in the rotated segments, even across a
+    writer reopen."""
+    path = str(tmp_path / "traj.jsonl")
+    log = TrajectoryLog(path, max_bytes=120, max_segments=3)
+    for i in range(12):
+        log.append({"request_id": i})
+    assert log.rotations >= 1
+    rotated_at = log.rotations
+    log.append({"request_id": 100})            # post-rotation append
+    log.close()
+    # A new writer on the same path appends to the active file, not a
+    # fresh segment.
+    with TrajectoryLog(path, max_bytes=10**6, max_segments=3) as log2:
+        log2.append({"request_id": 101})
+        assert log2.rotations == 0
+    ids = [r["request_id"] for r in TrajectoryLog.iter_records(path)]
+    assert ids[-2:] == [100, 101]
+    assert ids == sorted(ids)
+    assert rotated_at >= 1
+
+
+def test_trajectory_log_read_complete_filters_foreign_rows(tmp_path):
+    """`read_complete` keeps only rows carrying the full OPE schema, so
+    decision-trail events sharing a log file never reach the
+    estimators."""
+    path = str(tmp_path / "traj.jsonl")
+    full = {f: 0 for f in TrajectoryLog.FIELDS}
+    full.update(task="t", request_id=1)
+    with TrajectoryLog(path) as log:
+        log.append(full)
+        log.append({"event": "ope_gate", "outcome": "ope_reject",
+                    "task": "t"})              # trail event, same task
+        log.append(dict(full, request_id=2))
+    recs = TrajectoryLog.read_complete(path, task="t")
+    assert [r["request_id"] for r in recs] == [1, 2]
+    # Narrower field sets widen the net.
+    assert len(TrajectoryLog.read_complete(
+        path, task="t", fields=("task",))) == 3
+
+
 # ---------------------------------------------------------------------------
 # Telemetry satellites: throughput anchor, per-bucket reservoirs
 # ---------------------------------------------------------------------------
