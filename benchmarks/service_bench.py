@@ -12,12 +12,16 @@ records the req/s overhead — the fail-open layer's <= 5% acceptance
 bar (DESIGN.md §8) — under ``obs_overhead`` in the report. A second
 extra arm replays the same trace through the asyncio HTTP front door
 (DESIGN.md §9.1) and records req/s + p50/p99 vs the in-process
-setting under ``http_front_door``.
+setting under ``http_front_door``. A third arm prices the trajectory
+log's WAL fsync knob (DESIGN.md §11.1) — the same trace at
+``sync="none"|"rotate"|"always"`` — under ``trajlog_sync``;
+``--trajlog-sync`` prints just that row.
 
 CSV rows follow the `benchmarks/run.py` contract (name,us_per_call,derived)
 and the full report lands in benchmarks/results/service_bench.json.
 
-    PYTHONPATH=src python benchmarks/service_bench.py [--full] [--recompute]
+    PYTHONPATH=src python benchmarks/service_bench.py \\
+        [--full] [--recompute] [--trajlog-sync]
 """
 from __future__ import annotations
 
@@ -233,6 +237,27 @@ def run(full: bool = False, recompute: bool = False,
         "rps_on": on["rps"],
         "overhead_pct": 100.0 * (1.0 - on["rps"] / off["rps"]),
     }
+    # Trajectory-log durability arm (DESIGN.md §11.1): the same trace
+    # with the WAL fsync knob at each level. "always" is the zero-loss
+    # setting crash recovery leans on; this row quantifies its price
+    # relative to "none" (page-cache durability only).
+    sync_rps = {}
+    for sync in ("none", "rotate", "always"):
+        with tempfile.TemporaryDirectory() as td:
+            bundle = Observability(
+                registry=MetricsRegistry(),
+                trajectory_path=os.path.join(td, "trajectory.jsonl"),
+                trajectory_sync=sync)
+            res = bench_setting(root, trace, mb, ir_cfg, bucket_step,
+                                obs=bundle)
+            bundle.close()
+        sync_rps[sync] = res["rps"]
+    report["trajlog_sync"] = {
+        "max_batch": mb,
+        "rps": sync_rps,
+        "fsync_overhead_pct": 100.0 * (1.0 - sync_rps["always"]
+                                       / sync_rps["none"]),
+    }
     # HTTP front-door arm: the same trace fire-and-polled over the wire
     # vs the in-process setting at the same batch size.
     http = bench_http(root, trace, mb, ir_cfg, bucket_step)
@@ -266,6 +291,15 @@ def emit_rows(report: dict) -> list:
             f"service/obs_overhead_b{ov['max_batch']},{us:.0f},"
             f"rps_on={ov['rps_on']:.2f};rps_off={ov['rps_off']:.2f};"
             f"overhead_pct={ov['overhead_pct']:.2f}")
+    ts = report.get("trajlog_sync")
+    if ts:
+        us = 1e6 / max(ts["rps"]["always"], 1e-9)
+        rows.append(
+            f"service/trajlog_sync_b{ts['max_batch']},{us:.0f},"
+            f"rps_none={ts['rps']['none']:.2f};"
+            f"rps_rotate={ts['rps']['rotate']:.2f};"
+            f"rps_always={ts['rps']['always']:.2f};"
+            f"fsync_overhead_pct={ts['fsync_overhead_pct']:.2f}")
     hf = report.get("http_front_door")
     if hf:
         us = 1e6 / max(hf["rps"], 1e-9)
@@ -279,6 +313,9 @@ def emit_rows(report: dict) -> list:
 
 if __name__ == "__main__":
     import sys
-    for r in run(full="--full" in sys.argv,
-                 recompute="--recompute" in sys.argv):
+    rows = run(full="--full" in sys.argv,
+               recompute="--recompute" in sys.argv)
+    if "--trajlog-sync" in sys.argv:    # just the durability-price row
+        rows = [r for r in rows if r.startswith("service/trajlog_sync")]
+    for r in rows:
         print(r)

@@ -19,7 +19,9 @@ jax.config.update("jax_enable_x64", True)
 
 import json
 import os
+import random
 import tempfile
+import time
 import urllib.request
 
 import numpy as np
@@ -28,21 +30,33 @@ from repro.core import GMRESIREnv, TrainConfig, W1, reduced_action_space
 from repro.data import generate_dense_set
 from repro.service import (AutotuneServer, BatcherConfig, OnlineConfig,
                            PolicyRegistry, RolloutConfig, ShadowServer)
-from repro.service.http import HttpConfig, serve_http
+from repro.service.http import HttpConfig, retry_delay, serve_http
 from repro.solvers import IRConfig
 
 
-def http(method, url, payload=None):
+def http(method, url, payload=None, max_attempts=8):
+    """One HTTP exchange, honoring 429 backpressure like a polite
+    client: on 429 the server's Retry-After floors a jittered
+    exponential backoff (`repro.service.http.retry_delay`) and the
+    request is retried; other errors return immediately."""
     data = json.dumps(payload).encode() if payload is not None else None
-    req = urllib.request.Request(
-        url, data=data, method=method,
-        headers={"Content-Type": "application/json"})
-    try:
-        with urllib.request.urlopen(req, timeout=60) as r:
-            return r.status, json.loads(r.read().decode())
-    except urllib.error.HTTPError as e:
-        body = e.read().decode()
-        return e.code, (json.loads(body) if body else {})
+    rng = random.Random(0)
+    for attempt in range(max_attempts):
+        req = urllib.request.Request(
+            url, data=data, method=method,
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=60) as r:
+                return r.status, json.loads(r.read().decode())
+        except urllib.error.HTTPError as e:
+            body = e.read().decode()
+            parsed = json.loads(body) if body else {}
+            if e.code != 429 or attempt == max_attempts - 1:
+                return e.code, parsed
+            time.sleep(retry_delay(attempt,
+                                   e.headers.get("Retry-After"),
+                                   base_s=0.05, rng=rng))
+    raise RuntimeError("unreachable")
 
 
 def payload(system):

@@ -24,6 +24,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import faults
 from repro.core.bandit import QTable
 from repro.core.discretize import Discretizer
 from repro.core.executor import resolve_executor
@@ -124,6 +125,7 @@ class AutotuneEngine:
                    task=task_name, bucket=bucket)
             for c0 in range(0, len(plist), chunk):
                 chunk_pairs = plist[c0:c0 + chunk]
+                faults.maybe_raise("engine.solve", bucket=bucket)
                 outs = self.task.solve_rows(
                     [self._prep(i) for i, _ in chunk_pairs],
                     [self.action_space.actions[a] for _, a in chunk_pairs],
@@ -131,7 +133,9 @@ class AutotuneEngine:
                 self.n_solves += len(chunk_pairs)
                 self.n_pad_solves += chunk - len(chunk_pairs)
                 for p, out in zip(chunk_pairs, outs):
-                    self._cache[p] = out
+                    self._cache[p] = faults.corrupt_outcome(
+                        "solver.outcome", out, bucket=bucket,
+                        action_row=self.action_space.actions[p[1]])
         _count("repro_engine_solve_rows_total",
                "Real rows solved through the engine cache.", len(miss),
                task=task_name)
@@ -170,14 +174,17 @@ class AutotuneEngine:
                    task=task_name, bucket=bucket)
             for c0 in range(0, len(plist), chunk):
                 part = plist[c0:c0 + chunk]
+                faults.maybe_raise("engine.solve", bucket=bucket)
                 outs = self.task.solve_rows(
                     [self.task.prepare(inst) for _, (inst, _) in part],
                     [self.action_space.actions[a] for _, (_, a) in part],
                     chunk)
                 self.n_solves += len(part)
                 self.n_pad_solves += chunk - len(part)
-                for (key, (inst, _)), out in zip(part, outs):
-                    self._adhoc[key] = (inst, out)
+                for (key, (inst, a)), out in zip(part, outs):
+                    self._adhoc[key] = (inst, faults.corrupt_outcome(
+                        "solver.outcome", out, bucket=bucket,
+                        action_row=self.action_space.actions[a]))
         return [self._adhoc[(id(inst), int(a))][1] for inst, a in pairs]
 
     def outcome_for_instance(self, instance, action_idx: int) -> Outcome:

@@ -95,6 +95,9 @@ class SolveExecutor:
         stable key describing the computation — (entry point, config,
         backend) — or a sharded executor would rebuild (and recompile)
         its dispatch wrapper on every call."""
+        from repro import faults
+        faults.maybe_raise("executor.dispatch", executor=self.name,
+                           n_pad=n_pad)
         return batch_callable(self, solve_fn if key is None else key,
                               solve_fn)(arrays, n_pad)
 

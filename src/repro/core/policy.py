@@ -22,6 +22,16 @@ class PrecisionPolicy:
     def state_of(self, features: np.ndarray) -> int:
         return int(self.discretizer(np.asarray(features)))
 
+    @property
+    def safe_action(self) -> int:
+        """The known-safe all-fp64 arm: the highest action index. Action
+        spaces order arms lowest→highest precision, and `QTable.greedy`
+        breaks ties toward the highest index, so this is exactly the arm
+        a zeroed (never-trained) Q-row resolves to — the breaker's
+        degradation target (DESIGN.md §11.2) coincides with the
+        untrained-policy default by construction."""
+        return self.action_space.n_actions - 1
+
     def _nearest_visited(self, s: int) -> int:
         """Nearest visited state in bin coordinates (L2).
 

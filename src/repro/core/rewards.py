@@ -16,6 +16,7 @@ bounded.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -67,9 +68,19 @@ def penalty_term(n_gmres_total: int) -> float:
 def reward(ferr: float, nbe: float, n_gmres: int, status: int,
            action_fmt_ids: np.ndarray, kappa: float,
            cfg: RewardConfig) -> float:
-    """Eq. 21 for one (system, action) outcome."""
+    """Eq. 21 for one (system, action) outcome.
+
+    NaN measurements (a poisoned solve: fault injection, accelerator
+    NaN-propagation) yield a NaN reward rather than raising — the
+    serving path quarantines non-finite rewards away from the Q-table
+    (DESIGN.md §11.2), and `int(nan)` in the penalty would otherwise
+    crash the completion loop. Infs stay on the existing inf-safe path
+    (capped logs). FAILED outcomes keep the flat floor.
+    """
     if int(status) == FAILED:
         return cfg.fail_reward
+    if any(math.isnan(float(v)) for v in (ferr, nbe, n_gmres)):
+        return float("nan")
     r = (cfg.w2 * precision_term(action_fmt_ids, kappa)
          + cfg.w1 * accuracy_term(ferr, nbe, cfg))
     if cfg.use_penalty:

@@ -1,0 +1,24 @@
+"""Deterministic seeded fault injection (DESIGN.md §11.3).
+
+Per-test::
+
+    from repro.faults import FaultSpec, injected
+    with injected(FaultSpec("batcher.flush", "raise", p=0.5), seed=7):
+        ...
+
+Chaos runs (CI `chaos` job)::
+
+    REPRO_FAULTS="solver.outcome:divergence:p=0.1" REPRO_FAULTS_SEED=3 \
+        python -m pytest tests/test_faults.py -k chaos
+"""
+from repro.faults.injector import (ENV_PLAN, ENV_SEED, KINDS, SITES,
+                                   FaultInjected, FaultInjector, FaultSpec,
+                                   active, corrupt_outcome, from_env,
+                                   injected, install, maybe_raise,
+                                   uninstall, wrap_clock)
+
+__all__ = [
+    "ENV_PLAN", "ENV_SEED", "FaultInjected", "FaultInjector", "FaultSpec",
+    "KINDS", "SITES", "active", "corrupt_outcome", "from_env", "injected",
+    "install", "maybe_raise", "uninstall", "wrap_clock",
+]

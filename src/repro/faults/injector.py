@@ -1,0 +1,313 @@
+"""Deterministic, seeded fault injection for the serving stack
+(DESIGN.md §11.3).
+
+A `FaultInjector` holds a list of `FaultSpec`s — (site, kind, firing
+policy) triples — and is consulted from fixed *injection points*
+threaded through the production code: the solver outcome path, executor
+dispatch, micro-batcher flush, registry I/O, trajectory-log writes, and
+the HTTP request path. With no injector installed every injection point
+is a no-op costing one module-attribute read, so production traffic
+pays nothing.
+
+Determinism is the contract: each spec owns a `random.Random(seed ^
+spec_index)` stream and fires on its own hit counter, so a test (or a
+CI chaos run pinned to `REPRO_FAULTS_SEED`) sees the exact same fault
+schedule every run. Faults are injected in two ways:
+
+  * per-test: ``with injected(FaultSpec("batcher.flush", "raise")): ...``
+  * via env for chaos runs: ``REPRO_FAULTS="solver.outcome:nan:p=0.1;
+    trajlog.write:io_error:p=0.05:max=3" REPRO_FAULTS_SEED=7 pytest ...``
+
+Fault kinds:
+
+  ``nan``          corrupt an `Outcome`: every metric (and cost) → NaN,
+                   status preserved — the poisoned-reward vector the
+                   breaker quarantine must stop.
+  ``divergence``   corrupt an `Outcome`: status → FAILED, residual-like
+                   metrics → +inf — a diverged solve.
+  ``raise``        raise `FaultInjected` (RuntimeError) at the site.
+  ``io_error``     raise `OSError` at the site (registry/log I/O).
+  ``delay``        sleep `value` seconds at the site (slow solves).
+  ``clock_skew``   advance a wrapped clock by `value` seconds per fire.
+
+Every fire is counted fail-open in
+``repro_faults_injected_total{site,kind}`` so a chaos run's schedule is
+visible on the same /metrics surface it is perturbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import random
+import threading
+import time
+from contextlib import contextmanager
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+#: Injection points threaded through the serving stack. Sites are part
+#: of the public contract (tests and REPRO_FAULTS plans name them);
+#: DESIGN.md §11.3 carries the inventory with the guarding layer.
+SITES = (
+    "solver.outcome",     # corrupt a solved Outcome (batcher + engine)
+    "engine.solve",       # raise inside the engine solve cache
+    "executor.dispatch",  # raise/delay inside SolveExecutor.dispatch
+    "batcher.flush",      # raise/delay inside a micro-batch flush
+    "registry.io",        # I/O error in snapshot publish/promote/load
+    "trajlog.write",      # I/O error appending to the trajectory log
+    "http.request",       # raise/delay in the HTTP dispatch path
+    "clock",              # skew a wrap_clock()-wrapped server clock
+)
+
+KINDS = ("nan", "divergence", "raise", "io_error", "delay", "clock_skew")
+
+ENV_PLAN = "REPRO_FAULTS"
+ENV_SEED = "REPRO_FAULTS_SEED"
+
+
+class FaultInjected(RuntimeError):
+    """Raised at an injection point by a ``raise``-kind spec."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One fault: where, what, and the (deterministic) firing policy.
+
+    ``p`` is the per-hit firing probability, drawn from the spec's own
+    seeded stream; ``after`` skips the first N matching hits; hits
+    beyond ``max_fires`` fires never fire again (lets a chaos fault
+    exhaust itself so recovery paths are exercised too). ``match`` is a
+    code-only predicate over the injection point's context kwargs
+    (e.g. ``lambda ctx: not ctx.get("safe_arm")``)."""
+
+    site: str
+    kind: str
+    p: float = 1.0
+    after: int = 0
+    max_fires: Optional[int] = None
+    value: float = 0.05         # seconds, for delay / clock_skew
+    match: Optional[Callable[[dict], bool]] = None
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; "
+                             f"known: {SITES}")
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"known: {KINDS}")
+
+
+class FaultInjector:
+    """Deterministic fault scheduler over a list of `FaultSpec`s."""
+
+    def __init__(self, specs: Sequence[FaultSpec], seed: int = 0):
+        self.specs: List[FaultSpec] = list(specs)
+        self.seed = int(seed)
+        self._lock = threading.Lock()
+        # One independent stream + hit/fire counter per spec: adding a
+        # spec to a plan never perturbs the schedule of the others.
+        self._rngs = [random.Random((self.seed << 8) ^ i)
+                      for i in range(len(self.specs))]
+        self.hits: List[int] = [0] * len(self.specs)
+        self.fires: List[int] = [0] * len(self.specs)
+
+    def fire(self, site: str, **ctx) -> Optional[FaultSpec]:
+        """First spec that fires at `site` for this hit, else None."""
+        fired = None
+        with self._lock:
+            for i, spec in enumerate(self.specs):
+                if spec.site != site:
+                    continue
+                if spec.match is not None:
+                    try:
+                        if not spec.match(ctx):
+                            continue
+                    except Exception:
+                        continue
+                self.hits[i] += 1
+                if self.hits[i] <= spec.after:
+                    continue
+                if (spec.max_fires is not None
+                        and self.fires[i] >= spec.max_fires):
+                    continue
+                if spec.p < 1.0 and self._rngs[i].random() >= spec.p:
+                    continue
+                self.fires[i] += 1
+                fired = spec
+                break
+        if fired is not None:
+            _count_fire(site, fired.kind)
+        return fired
+
+    def counts(self) -> Dict[Tuple[str, str], Tuple[int, int]]:
+        """(site, kind) -> (hits, fires) for every spec."""
+        with self._lock:
+            return {(s.site, s.kind): (h, f) for s, h, f
+                    in zip(self.specs, self.hits, self.fires)}
+
+
+def _count_fire(site: str, kind: str) -> None:
+    """Fail-open fire counter on the process-default metrics registry —
+    a chaos run's fault schedule shows up on the /metrics surface it is
+    perturbing (same pattern as the registry/engine lifecycle counters)."""
+    try:
+        from repro.obs.metrics import default_registry
+        default_registry().counter(
+            "repro_faults_injected_total",
+            "Faults fired by the injection subsystem, by site and kind.",
+            ("site", "kind")).labels(site=site, kind=kind).inc()
+    except Exception:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Process-global installation (per-test via `injected`, global via env)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[FaultInjector] = None
+_ENV_PARSED = False
+
+
+def install(injector: Optional[FaultInjector]) -> None:
+    """Install `injector` as the process-global fault source (None
+    uninstalls). Prefer the `injected` context manager in tests."""
+    global _ACTIVE, _ENV_PARSED
+    _ACTIVE = injector
+    _ENV_PARSED = True          # explicit install overrides the env plan
+
+
+def uninstall() -> None:
+    """Remove any installed injector and re-arm env-plan discovery (the
+    next `active()` call re-reads REPRO_FAULTS)."""
+    global _ACTIVE, _ENV_PARSED
+    _ACTIVE = None
+    _ENV_PARSED = False
+
+
+def active() -> Optional[FaultInjector]:
+    """The installed injector; lazily parses REPRO_FAULTS once when
+    nothing was installed explicitly (the chaos-run entry point)."""
+    global _ACTIVE, _ENV_PARSED
+    if _ACTIVE is None and not _ENV_PARSED:
+        _ENV_PARSED = True
+        plan = os.environ.get(ENV_PLAN, "").strip()
+        if plan:
+            _ACTIVE = from_env(plan,
+                               int(os.environ.get(ENV_SEED, "0") or 0))
+    return _ACTIVE
+
+
+@contextmanager
+def injected(*specs: FaultSpec, seed: int = 0):
+    """Install a fresh injector for the `with` body, restoring whatever
+    was active before (the per-test entry point)."""
+    global _ACTIVE, _ENV_PARSED
+    prev, prev_parsed = _ACTIVE, _ENV_PARSED
+    inj = FaultInjector(specs, seed=seed)
+    _ACTIVE = inj
+    _ENV_PARSED = True
+    try:
+        yield inj
+    finally:
+        _ACTIVE, _ENV_PARSED = prev, prev_parsed
+
+
+def from_env(plan: str, seed: int = 0) -> FaultInjector:
+    """Parse a ``REPRO_FAULTS`` plan string into an injector.
+
+    Grammar: ``site:kind[:p=F][:after=N][:max=N][:value=F]`` joined by
+    ``;``. Example::
+
+        solver.outcome:divergence:p=0.15;trajlog.write:io_error:max=3
+    """
+    specs: List[FaultSpec] = []
+    for part in plan.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        fields = part.split(":")
+        if len(fields) < 2:
+            raise ValueError(f"bad fault spec {part!r}: need site:kind")
+        kwargs: dict = {}
+        for opt in fields[2:]:
+            k, _, v = opt.partition("=")
+            k = k.strip()
+            if k == "p":
+                kwargs["p"] = float(v)
+            elif k == "after":
+                kwargs["after"] = int(v)
+            elif k == "max":
+                kwargs["max_fires"] = int(v)
+            elif k == "value":
+                kwargs["value"] = float(v)
+            else:
+                raise ValueError(f"unknown fault option {opt!r} in {part!r}")
+        specs.append(FaultSpec(fields[0].strip(), fields[1].strip(),
+                               **kwargs))
+    return FaultInjector(specs, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Injection-point helpers (what production code calls)
+# ---------------------------------------------------------------------------
+
+def maybe_raise(site: str, **ctx) -> None:
+    """Raise at `site` when a ``raise``/``io_error`` spec fires; apply
+    ``delay`` specs too (a slow solve is observed at the same points an
+    exception would be)."""
+    inj = active()
+    if inj is None:
+        return
+    spec = inj.fire(site, **ctx)
+    if spec is None:
+        return
+    if spec.kind == "raise":
+        raise FaultInjected(f"injected fault at {site}")
+    if spec.kind == "io_error":
+        raise OSError(f"injected I/O error at {site}")
+    if spec.kind == "delay":
+        time.sleep(max(float(spec.value), 0.0))
+
+
+def corrupt_outcome(site: str, outcome, **ctx):
+    """Return `outcome`, possibly corrupted by a ``nan``/``divergence``
+    spec at `site` (other kinds at the site behave as in maybe_raise)."""
+    inj = active()
+    if inj is None:
+        return outcome
+    spec = inj.fire(site, **ctx)
+    if spec is None:
+        return outcome
+    from repro.core.task import FAILED, Outcome
+    if spec.kind == "nan":
+        # Healthy-looking status with poisoned numbers: the reward
+        # computed from these metrics is NaN — the quarantine test case.
+        return Outcome(status=int(outcome.status), cost=math.nan,
+                       metrics={k: math.nan for k in outcome.metrics})
+    if spec.kind == "divergence":
+        return Outcome(status=FAILED, cost=float(outcome.cost),
+                       metrics={k: math.inf for k in outcome.metrics})
+    if spec.kind == "raise":
+        raise FaultInjected(f"injected fault at {site}")
+    if spec.kind == "io_error":
+        raise OSError(f"injected I/O error at {site}")
+    if spec.kind == "delay":
+        time.sleep(max(float(spec.value), 0.0))
+    return outcome
+
+
+def wrap_clock(clock: Callable[[], float]) -> Callable[[], float]:
+    """Wrap a clock callable so ``clock_skew`` specs at site ``clock``
+    accumulate an offset (each fire adds `value` seconds). With no
+    injector active the wrapper is a transparent pass-through."""
+    offset = [0.0]
+
+    def skewed() -> float:
+        inj = active()
+        if inj is not None:
+            spec = inj.fire("clock")
+            if spec is not None and spec.kind == "clock_skew":
+                offset[0] += float(spec.value)
+        return clock() + offset[0]
+
+    return skewed

@@ -48,27 +48,30 @@ class Observability:
                  trajectory_path: Optional[str] = None,
                  trace_capacity: int = 4096,
                  trajectory_max_bytes: Optional[int] = None,
-                 trajectory_max_segments: int = 3):
+                 trajectory_max_segments: int = 3,
+                 trajectory_sync: str = "none"):
         self.registry = registry if registry is not None \
             else default_registry()
         self.tracer = tracer if tracer is not None \
             else Tracer(capacity=trace_capacity)
         self.trajlog = (TrajectoryLog(
             trajectory_path, max_bytes=trajectory_max_bytes,
-            max_segments=trajectory_max_segments)
+            max_segments=trajectory_max_segments, sync=trajectory_sync)
             if trajectory_path else None)
         self.http: Optional[ObsHTTPServer] = None
 
     def serve(self, host: str = "127.0.0.1", port: int = 0,
               ready_fn=None, telemetry_fn=None,
-              rollout_fn=None) -> ObsHTTPServer:
-        """Start (or return the running) HTTP front door."""
+              rollout_fn=None, health_fn=None) -> ObsHTTPServer:
+        """Start (or return the running) HTTP front door. ``health_fn``
+        (when wired) contributes degradation state — open breakers,
+        recovery metadata — to ``/healthz`` and ``/readyz``."""
         if self.http is None:
             self.http = ObsHTTPServer(
                 self.registry, host=host, port=port, ready_fn=ready_fn,
                 telemetry_fn=telemetry_fn,
                 trace_fn=self.tracer.chrome_trace,
-                rollout_fn=rollout_fn)
+                rollout_fn=rollout_fn, health_fn=health_fn)
         return self.http
 
     def close(self) -> None:

@@ -12,10 +12,14 @@ Endpoints:
 
   * ``/metrics``       Prometheus text exposition 0.0.4
   * ``/metrics.json``  the same samples as JSON
-  * ``/healthz``       liveness — 200 as long as the process serves HTTP
+  * ``/healthz``       liveness — 200 as long as the process serves HTTP;
+    with a wired ``health_fn`` the body reports degradation state
+    (``status: degraded``, open breakers per bucket, last-recovery
+    metadata) while staying 200 — degraded-but-serving is by design
   * ``/readyz``        readiness — 200 iff the wired `ready_fn()` is
     truthy (for `AutotuneServer`: policy snapshot loaded + bucket grid
-    warm), else 503 with a JSON reason
+    warm), else 503 with a JSON reason; degradation state attached the
+    same way
   * ``/telemetry``     the wired telemetry snapshot as JSON (optional;
     includes a ``rollout`` key when a rollout controller is wired)
   * ``/rollout``       canary rollout-controller state (optional)
@@ -184,12 +188,14 @@ class ObsHTTPServer:
                  ready_fn: Optional[Callable[[], object]] = None,
                  telemetry_fn: Optional[Callable[[], dict]] = None,
                  trace_fn: Optional[Callable[[], dict]] = None,
-                 rollout_fn: Optional[Callable[[], dict]] = None):
+                 rollout_fn: Optional[Callable[[], dict]] = None,
+                 health_fn: Optional[Callable[[], dict]] = None):
         self.registry = registry
         self.ready_fn = ready_fn
         self.telemetry_fn = telemetry_fn
         self.trace_fn = trace_fn
         self.rollout_fn = rollout_fn
+        self.health_fn = health_fn
         obs = self
 
         class Handler(BaseHTTPRequestHandler):
@@ -241,13 +247,27 @@ class ObsHTTPServer:
             self._respond_json(handler, 200, render_json(self.registry))
         elif path == "/healthz":
             scrapes.labels(path=path).inc()
-            self._respond_json(handler, 200, {"status": "ok"})
+            # Liveness stays 200 while degraded — a breaker pinning to
+            # the safe arm is the process *working as designed*, and
+            # restarting it would only lose learner state. The payload
+            # carries the degradation detail for operators/alerting.
+            payload = {"status": "ok"}
+            if self.health_fn is not None:
+                state = dict(self.health_fn())
+                if state.pop("degraded", False):
+                    payload["status"] = "degraded"
+                payload.update(state)
+            self._respond_json(handler, 200, payload)
         elif path == "/readyz":
             scrapes.labels(path=path).inc()
             ready = bool(self.ready_fn()) if self.ready_fn else True
-            self._respond_json(
-                handler, 200 if ready else 503,
-                {"status": "ready" if ready else "unready"})
+            payload = {"status": "ready" if ready else "unready"}
+            if self.health_fn is not None:
+                state = dict(self.health_fn())
+                if state.pop("degraded", False):
+                    payload["status"] = "degraded"
+                payload.update(state)
+            self._respond_json(handler, 200 if ready else 503, payload)
         elif path == "/telemetry" and self.telemetry_fn is not None:
             scrapes.labels(path=path).inc()
             snap = self.telemetry_fn()

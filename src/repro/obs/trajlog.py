@@ -22,6 +22,17 @@ fresh active file is opened. Readers span all live segments oldest
 first, so rotation is invisible to `read()`/`iter_records()`. Rotation
 failures are swallowed (fail-open): appends keep going to the current
 file.
+
+The ``sync`` knob sets fsync durability (DESIGN.md §11.1) — the log is
+the learner's write-ahead record, so what survives a *host* crash is
+what recovery can replay:
+
+  * ``"none"``   (default) line-buffered only; a process crash loses at
+    most the final partial line, a host crash may lose page-cache tail.
+  * ``"rotate"`` fsync when a segment is sealed (rotation/close):
+    rotated history is durable, the active segment is best-effort.
+  * ``"always"`` fsync after every append: zero-loss, priced in
+    benchmarks/service_bench.py (``--trajlog-sync``).
 """
 from __future__ import annotations
 
@@ -29,6 +40,10 @@ import json
 import os
 import threading
 from typing import Iterator, List, Optional
+
+from repro import faults
+
+_SYNC_LEVELS = ("none", "rotate", "always")
 
 
 def _jsonable(v):
@@ -50,21 +65,35 @@ class TrajectoryLog:
               "outcome", "latency_s", "policy_version", "drift")
 
     def __init__(self, path: str, max_bytes: Optional[int] = None,
-                 max_segments: int = 3):
+                 max_segments: int = 3, sync: str = "none"):
+        if sync not in _SYNC_LEVELS:
+            raise ValueError(f"sync must be one of {_SYNC_LEVELS}, "
+                             f"got {sync!r}")
         self.path = str(path)
         self.max_bytes = max_bytes
         self.max_segments = int(max_segments)
+        self.sync = sync
         self._lock = threading.Lock()
         self._fh = open(self.path, "a", buffering=1)   # line-buffered
         self.written = 0
         self.rotations = 0
 
+    def _fsync(self) -> None:
+        """Flush+fsync the active file; OSError propagates to the
+        caller's fail-open guard (a full disk surfaces as one counted
+        obs error, not a wedged server)."""
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+
     def append(self, record: dict) -> None:
+        faults.maybe_raise("trajlog.write", path=self.path)
         line = json.dumps(record, default=_jsonable,
                           separators=(",", ":"))
         with self._lock:
             self._fh.write(line + "\n")
             self.written += 1
+            if self.sync == "always":
+                self._fsync()
             if (self.max_bytes is not None
                     and self._fh.tell() >= self.max_bytes):
                 self._rotate()
@@ -74,6 +103,11 @@ class TrajectoryLog:
         fresh active file. Caller holds the lock. Never raises — a
         failed rename leaves the log appending to the current file."""
         try:
+            if self.sync != "none":
+                try:
+                    self._fsync()       # seal the segment durably
+                except OSError:
+                    pass
             self._fh.close()
             for k in range(self.max_segments, 0, -1):
                 src = f"{self.path}.{k}"
@@ -94,6 +128,11 @@ class TrajectoryLog:
     def close(self) -> None:
         with self._lock:
             if not self._fh.closed:
+                if self.sync != "none":
+                    try:
+                        self._fsync()
+                    except OSError:
+                        pass
                 self._fh.close()
 
     def __enter__(self) -> "TrajectoryLog":

@@ -11,21 +11,25 @@ task's `TunableTask` hooks; the server and batcher import no solver.
 """
 from repro.obs import Observability
 from .batcher import BatcherConfig, FlushResult, MicroBatcher
+from .breaker import BreakerConfig, CircuitBreakers
 from .instrument import (LearnerInstruments, RolloutInstruments,
                          ServiceInstruments)
 from .online import (DriftDetector, EpsilonController, OnlineConfig,
                      OnlineLearner, OnlineUpdate)
-from .registry import PolicyRegistry
+from .recovery import RecoveryReport, recover_server, replay_wal_tail
+from .registry import PolicyRegistry, SnapshotCorrupted
 from .rollout import (OPEGateRejected, RolloutConfig, RolloutDecision,
                       ShadowServer)
 from .server import AutotuneServer, SolveResponse
 from .telemetry import Ewma, Telemetry
 
 __all__ = [
-    "AutotuneServer", "BatcherConfig", "DriftDetector", "EpsilonController",
-    "Ewma", "FlushResult", "LearnerInstruments", "MicroBatcher",
-    "Observability", "OnlineConfig", "OnlineLearner", "OnlineUpdate",
-    "OPEGateRejected", "PolicyRegistry", "RolloutConfig", "RolloutDecision",
+    "AutotuneServer", "BatcherConfig", "BreakerConfig", "CircuitBreakers",
+    "DriftDetector", "EpsilonController", "Ewma", "FlushResult",
+    "LearnerInstruments", "MicroBatcher", "Observability", "OnlineConfig",
+    "OnlineLearner", "OnlineUpdate", "OPEGateRejected", "PolicyRegistry",
+    "RecoveryReport", "RolloutConfig", "RolloutDecision",
     "RolloutInstruments", "ServiceInstruments", "ShadowServer",
-    "SolveResponse", "Telemetry",
+    "SnapshotCorrupted", "SolveResponse", "Telemetry", "recover_server",
+    "replay_wal_tail",
 ]

@@ -32,6 +32,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import faults
 from repro.core.executor import resolve_executor
 from repro.core.task import Outcome, TunableTask, coerce_task
 
@@ -43,6 +44,12 @@ class BatcherConfig:
     max_wait_s: float = 0.05    # oldest-request deadline for partial flush
     bucket_step: int = 128      # used when adapting a legacy solver config
     min_bucket: int = 128
+    # Hard per-request deadline (None = no deadline): a request still
+    # queued this long after submit is expired by `expire_overdue()`
+    # instead of solved — the server answers it with a terminal FAILED
+    # response (no Q-update), so a wedged or glacial bucket cannot hold
+    # requests hostage (DESIGN.md §11.2).
+    request_deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -112,13 +119,48 @@ class MicroBatcher:
                       ) -> FlushResult:
         target = self.flush_target(bucket)
         t0, w0 = self.clock(), time.perf_counter()
+        # Fault site: a raise here leaves the entries queued (pump()
+        # only dequeues after a successful flush), so the flush is
+        # retried by the next pump — the supervised HTTP flush loop
+        # counts the restart and carries on.
+        faults.maybe_raise("batcher.flush", bucket=bucket,
+                           n_entries=len(entries))
         records = self.task.solve_rows(
             [e.rows for e in entries], [e.action_row for e in entries],
             target)
+        # Fault site: corrupt solved outcomes (NaN / divergence) after
+        # the real solve — the poisoned-reward path the breaker and
+        # Q-update quarantine defend against.
+        records = [
+            faults.corrupt_outcome("solver.outcome", rec, bucket=bucket,
+                                   action_row=e.action_row)
+            for e, rec in zip(entries, records)]
         return FlushResult(bucket, [e.req_id for e in entries], records,
                            target, t_solve_start=t0,
                            t_solve_end=self.clock(),
                            solve_s=time.perf_counter() - w0)
+
+    def expire_overdue(self, now: Optional[float] = None) -> List[_Pending]:
+        """Remove and return every queued entry older than
+        `request_deadline_s` (no-op when the deadline is unset). The
+        server turns each into a terminal FAILED response."""
+        if self.cfg.request_deadline_s is None:
+            return []
+        now = self.clock() if now is None else now
+        expired: List[_Pending] = []
+        for bucket in list(self._queues):
+            q = self._queues[bucket]
+            keep = []
+            for e in q:
+                if now - e.enqueued_at >= self.cfg.request_deadline_s:
+                    expired.append(e)
+                else:
+                    keep.append(e)
+            if keep:
+                self._queues[bucket] = keep
+            else:
+                del self._queues[bucket]
+        return expired
 
     def pump(self, force: bool = False) -> List[FlushResult]:
         """Flush every due bucket; with force=True, flush everything."""

@@ -8,9 +8,10 @@ caller-driven `step()`, graceful drain on shutdown, and a sync facade
 """
 from repro.service.http.app import HttpConfig, HttpFrontDoor, serve_http
 from repro.service.http.models import (SolveRequest, ValidationError,
-                                       result_payload)
+                                       parse_retry_after, result_payload,
+                                       retry_delay)
 
 __all__ = [
     "HttpConfig", "HttpFrontDoor", "SolveRequest", "ValidationError",
-    "result_payload", "serve_http",
+    "parse_retry_after", "result_payload", "retry_delay", "serve_http",
 ]

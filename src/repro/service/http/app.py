@@ -44,6 +44,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro import faults
 from repro.core.task import bucket_of
 from repro.service.http.models import (SolveRequest, ValidationError,
                                        accepted_payload, result_payload)
@@ -102,6 +103,7 @@ class HttpFrontDoor:
         self._early: Dict[int, object] = {}       # completed pre-register
         self._done: "OrderedDict[int, dict]" = OrderedDict()
         self.results_evicted = 0
+        self.flush_restarts = 0
         server.auto_step = False    # the flush loop is the only pump
         server.on_response = self._on_response_worker
 
@@ -116,14 +118,21 @@ class HttpFrontDoor:
 
     async def aclose(self) -> None:
         """Graceful drain: stop accepting, flush and answer everything
-        admitted, then stop the pump."""
+        admitted; whatever is still unanswered at ``drain_timeout_s``
+        gets a *terminal failure* response (sync callers see it
+        immediately, fire-and-poll callers via GET /v1/result) — no
+        request is left hanging forever."""
         self._draining = True
         if self._asyncio_server is not None:
             self._asyncio_server.close()
             await self._asyncio_server.wait_closed()
         deadline = self._loop.time() + self.cfg.drain_timeout_s
         while self._pending and self._loop.time() < deadline:
-            await self._loop.run_in_executor(self._exec, self.server.drain)
+            try:
+                await self._loop.run_in_executor(self._exec,
+                                                 self.server.drain)
+            except Exception:
+                self._count_error()
             await asyncio.sleep(0.005)
         if self._flush_task is not None:
             self._flush_task.cancel()
@@ -132,8 +141,9 @@ class HttpFrontDoor:
             except asyncio.CancelledError:
                 pass
         for rid, entry in list(self._pending.items()):
-            if entry.future is not None and not entry.future.done():
-                entry.future.cancel()
+            self._fail_pending(rid, entry,
+                               "server shut down before this request "
+                               "was solved")
         self._exec.shutdown(wait=False)
 
     @property
@@ -196,6 +206,24 @@ class HttpFrontDoor:
             self._done.popitem(last=False)
             self.results_evicted += 1
 
+    def _fail_pending(self, rid: int, entry: _PendingEntry,
+                      reason: str) -> None:
+        """Answer one admitted-but-unsolved request with a terminal
+        failure payload (drain deadline expiry)."""
+        del self._pending[rid]
+        self._depth[entry.bucket] = \
+            max(self._depth.get(entry.bucket, 1) - 1, 0)
+        payload = {"request_id": rid, "status": "failed", "error": reason}
+        if entry.client_id is not None:
+            payload["client_request_id"] = entry.client_id
+        if entry.future is not None and not entry.future.done():
+            entry.future.set_result(payload)
+            return
+        self._done[rid] = payload
+        while len(self._done) > self.cfg.max_done:
+            self._done.popitem(last=False)
+            self.results_evicted += 1
+
     def _register(self, rid: int, entry: _PendingEntry) -> None:
         self._pending[rid] = entry
         resp = self._early.pop(rid, None)
@@ -204,13 +232,30 @@ class HttpFrontDoor:
 
     # -- flush loop ----------------------------------------------------------
     async def _flush_loop(self) -> None:
+        """Supervisor: restart the pump whenever it crashes
+        (DESIGN.md §11). A fault inside step() — an injected
+        ``batcher.flush`` raise, a transient solver error — kills one
+        pump iteration, not the front door: the batcher only dequeues
+        entries after a successful flush, so the restarted pump retries
+        them. Restarts are counted in
+        ``repro_http_flush_restarts_total``."""
         while True:
             try:
-                if self.server.pending:
-                    await self._loop.run_in_executor(
-                        self._exec, self.server.step)
+                await self._flush_loop_inner()
+            except asyncio.CancelledError:
+                raise
             except Exception:
                 self._count_error()
+                self._count_flush_restart()
+                if self._draining:
+                    return
+                await asyncio.sleep(self.cfg.flush_interval_s)
+
+    async def _flush_loop_inner(self) -> None:
+        while True:
+            if self.server.pending:
+                await self._loop.run_in_executor(
+                    self._exec, self.server.step)
             await asyncio.sleep(self.cfg.flush_interval_s)
 
     # -- HTTP plumbing ---------------------------------------------------------
@@ -297,6 +342,11 @@ class HttpFrontDoor:
     # -- routing ---------------------------------------------------------------
     async def _dispatch(self, method: str, path: str, body: bytes):
         try:
+            # Fault site: an injected raise here surfaces as a clean
+            # 500 (below) and an injected delay as a slow response —
+            # the chaos suite drives client-visible failure modes
+            # through the same handler the real ones would take.
+            faults.maybe_raise("http.request", method=method, path=path)
             if path in ("/v1/solve", "/v1/solve:sync"):
                 if method != "POST":
                     return 405, {"error": "POST required"}, ()
@@ -367,6 +417,11 @@ class HttpFrontDoor:
             self._count_request(route, 504)
             return (504, {"error": "solve timed out", "request_id": rid,
                           "status": "pending"}, extra)
+        if result.get("status") == "failed":
+            # Terminal failure from the drain deadline: the request was
+            # admitted but the server shut down before solving it.
+            self._count_request(route, 503)
+            return 503, result, extra
         self._count_request(route, 200)
         return 200, result, extra
 
@@ -433,6 +488,16 @@ class HttpFrontDoor:
     def _count_error(self) -> None:
         try:
             self._registry().count_error()
+        except Exception:
+            pass
+
+    def _count_flush_restart(self) -> None:
+        self.flush_restarts += 1
+        try:
+            self._registry().counter(
+                "repro_http_flush_restarts_total",
+                "Background flush-loop crashes survived by the "
+                "supervisor (the pump was restarted).").inc()
         except Exception:
             pass
 

@@ -25,6 +25,7 @@ decided, and the server-measured submit-to-response latency.
 from __future__ import annotations
 
 import dataclasses
+import random
 from typing import Optional
 
 import numpy as np
@@ -130,7 +131,9 @@ def result_payload(resp: SolveResponse, client_id: Optional[str] = None,
     rec = resp.record
     out = {
         "request_id": resp.request_id,
-        "status": "done",
+        # "expired" marks a request whose batcher deadline passed before
+        # a solve ran (terminal: the outcome is a synthetic FAILED).
+        "status": "expired" if resp.expired else "done",
         "bucket": int(resp.bucket),
         "action": int(resp.action),
         "action_names": list(resp.action_names),
@@ -149,3 +152,44 @@ def result_payload(resp: SolveResponse, client_id: Optional[str] = None,
     if client_id is not None:
         out["client_request_id"] = client_id
     return out
+
+
+# ---------------------------------------------------------------------------
+# Client-side backoff (the polite half of the 429 + Retry-After contract)
+# ---------------------------------------------------------------------------
+
+def parse_retry_after(value) -> Optional[float]:
+    """Seconds from a ``Retry-After`` header value (delta-seconds form
+    only — the HTTP-date form is not worth a date parser here); None
+    when absent/unparseable."""
+    if value is None:
+        return None
+    try:
+        return max(float(str(value).strip()), 0.0)
+    except ValueError:
+        return None
+
+
+def retry_delay(attempt: int, retry_after=None, *, base_s: float = 0.1,
+                cap_s: float = 30.0, jitter: float = 0.5,
+                rng=None) -> float:
+    """Jittered exponential backoff honoring ``Retry-After`` as a floor.
+
+    ``base_s * 2**attempt`` capped at ``cap_s``, stretched by a uniform
+    factor in ``[1, 1 + jitter]`` (simultaneous client retries are the
+    thundering herd the jitter breaks), and never below what the server
+    asked for via ``Retry-After`` (raw header values are accepted —
+    `parse_retry_after` is applied). ``rng`` is any object with
+    ``random()`` (e.g. ``random.Random(seed)``) for deterministic
+    tests; default is the module-level `random`.
+    """
+    if rng is None:
+        rng = random
+    delay = min(float(base_s) * (2.0 ** max(int(attempt), 0)),
+                float(cap_s))
+    delay *= 1.0 + max(float(jitter), 0.0) * rng.random()
+    floor = retry_after if isinstance(retry_after, (int, float)) \
+        else parse_retry_after(retry_after)
+    if floor is not None:
+        delay = max(delay, float(floor))
+    return delay

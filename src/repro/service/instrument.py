@@ -96,6 +96,25 @@ class ServiceInstruments:
             "repro_server_responses_evicted_total",
             "Unclaimed SolveResponses evicted from the bounded LRU "
             "retention (consumers that never poll()).", ("task",))
+        # Fault-tolerance surface (DESIGN.md §11).
+        self.breaker_state = r.gauge(
+            "repro_breaker_state",
+            "Per-bucket circuit-breaker state "
+            "(0=closed, 0.5=half_open, 1=open).", ("task", "bucket"))
+        self.breaker_transitions = r.counter(
+            "repro_breaker_transitions_total",
+            "Circuit-breaker state changes, by edge.",
+            ("task", "bucket", "from", "to"))
+        self.quarantined = r.counter(
+            "repro_quarantined_updates_total",
+            "Rewards observed but NOT applied to the Q-table (breaker "
+            "open, pinned traffic, or non-finite reward).",
+            ("task", "bucket"))
+        self.expired = r.counter(
+            "repro_expired_requests_total",
+            "Requests answered with a terminal FAILED response because "
+            "their batcher deadline expired before a solve ran.",
+            ("task", "bucket"))
 
     # -- request path ------------------------------------------------------
     @fail_open
@@ -171,7 +190,31 @@ class ServiceInstruments:
                 "latency_s": float(resp.latency_s),
                 "policy_version": resp.policy_version,
                 "drift": bool(resp.drift),
+                # WAL keys (service.recovery): `seq` orders records
+                # against snapshot watermarks; `quarantined` records are
+                # skipped on replay — they never trained the live table.
+                "seq": int(resp.seq),
+                "quarantined": bool(resp.quarantined),
             })
+
+    # -- fault tolerance ---------------------------------------------------
+    @fail_open
+    def on_breaker_transition(self, bucket: int, old: str,
+                              new: str) -> None:
+        from repro.service.breaker import STATE_VALUES
+        self.breaker_state.labels(task=self.task, bucket=bucket).set(
+            STATE_VALUES.get(new, 1.0))
+        self.breaker_transitions.labels(
+            task=self.task, bucket=bucket,
+            **{"from": old, "to": new}).inc()
+
+    @fail_open
+    def on_quarantine(self, bucket: int) -> None:
+        self.quarantined.labels(task=self.task, bucket=bucket).inc()
+
+    @fail_open
+    def on_expired(self, bucket: int) -> None:
+        self.expired.labels(task=self.task, bucket=bucket).inc()
 
     @fail_open
     def on_snapshot(self, version: str) -> None:

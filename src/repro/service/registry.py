@@ -11,9 +11,19 @@ Layout (one directory per registry):
 pointer atomically so a concurrently-restarting server can never observe a
 half-written policy; `rollback` re-promotes the previously live version.
 `warm_start` bootstraps version 1 from an offline `train_policy` run.
+
+Durability contract (DESIGN.md §11.1): every snapshot file is fsync'd,
+`meta.json` is written *last* through an atomic tmp+rename (so a version
+directory without a valid meta is an incomplete publish, never a
+half-written one), and meta carries sha256 checksums of the data files.
+`load` verifies checksums and raises `SnapshotCorrupted` on damage;
+`load_last_good` walks CURRENT → HISTORY (newest first) past corrupt or
+incomplete versions, so recovery after a crash-during-publish or disk
+corruption always lands on the newest verifiable snapshot.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import tempfile
@@ -21,9 +31,74 @@ import threading
 import time
 from typing import List, Optional, Tuple
 
+from repro import faults
 from repro.core.autotune import TrainConfig, train_policy
 from repro.core.policy import PrecisionPolicy
 from repro.core.rewards import RewardConfig
+
+
+class SnapshotCorrupted(RuntimeError):
+    """A version's files are missing, unreadable, or fail checksum."""
+
+    def __init__(self, version: str, reason: str):
+        super().__init__(f"snapshot {version}: {reason}")
+        self.version = version
+        self.reason = reason
+
+
+#: Snapshot data files covered by the meta.json checksum manifest.
+_DATA_FILES = ("qtable.npz", "policy.json")
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 16), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _fsync_dir(path: str) -> None:
+    """Fsync a directory so a rename inside it is durable. Swallowed on
+    platforms/filesystems that refuse directory fds — the rename is
+    still atomic, only crash-durability of the *name* is best-effort."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _write_atomic(path: str, text: str) -> None:
+    """Durable atomic file write: tmp in the target dir, flush+fsync,
+    rename over, fsync the dir."""
+    d = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix="." + os.path.basename(path)
+                               + "-")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    _fsync_dir(d)
 
 
 def _count(name: str, help: str) -> None:
@@ -81,6 +156,29 @@ class PolicyRegistry:
         with open(os.path.join(self._vdir(version), "meta.json")) as f:
             return json.load(f)
 
+    # -- integrity ---------------------------------------------------------
+    def verify(self, version: str) -> dict:
+        """Checksum-verify a version; returns its meta. Raises
+        `SnapshotCorrupted` when meta is missing/unreadable (an
+        incomplete publish — meta is written last) or a data file is
+        missing or fails its sha256. Pre-checksum snapshots (no
+        ``checksums`` key) pass on file existence alone."""
+        try:
+            meta = self.meta(version)
+        except (FileNotFoundError, json.JSONDecodeError) as e:
+            raise SnapshotCorrupted(version,
+                                    f"meta.json unreadable ({e})") from e
+        sums = meta.get("checksums")
+        vdir = self._vdir(version)
+        for fname in _DATA_FILES:
+            path = os.path.join(vdir, fname)
+            if not os.path.exists(path):
+                raise SnapshotCorrupted(version, f"{fname} missing")
+            if sums and fname in sums and _sha256(path) != sums[fname]:
+                raise SnapshotCorrupted(version,
+                                        f"{fname} fails sha256 checksum")
+        return meta
+
     # -- writes ------------------------------------------------------------
     def publish(self, policy: PrecisionPolicy, note: str = "",
                 extra_meta: Optional[dict] = None) -> str:
@@ -100,15 +198,26 @@ class PolicyRegistry:
             except FileExistsError:
                 continue
             break
+        faults.maybe_raise("registry.io", op="publish", version=version)
         policy.save(vdir)
+        # Durability order (DESIGN.md §11.1): data files synced first,
+        # then meta.json — carrying their checksums — lands atomically
+        # as the commit record. A crash anywhere before the meta rename
+        # leaves a version that verify()/load_last_good() skip.
+        checksums = {}
+        for fname in _DATA_FILES:
+            fpath = os.path.join(vdir, fname)
+            _fsync_file(fpath)
+            checksums[fname] = _sha256(fpath)
         meta = {"version": version, "note": note, "created_at": time.time(),
                 "n_states": policy.qtable.n_states,
                 "n_actions": policy.qtable.n_actions,
                 "visited_states": int((policy.qtable.N.sum(axis=1) > 0)
-                                      .sum())}
+                                      .sum()),
+                "checksums": checksums}
         meta.update(extra_meta or {})
-        with open(os.path.join(vdir, "meta.json"), "w") as f:
-            json.dump(meta, f, indent=1)
+        _write_atomic(os.path.join(vdir, "meta.json"),
+                      json.dumps(meta, indent=1))
         _count("repro_registry_publishes_total",
                "Policy snapshots published (not yet live).")
         return version
@@ -118,17 +227,15 @@ class PolicyRegistry:
         with self._lock:
             if version not in self.versions():
                 raise ValueError(f"unknown version {version!r}")
-            fd, tmp = tempfile.mkstemp(dir=self.root, prefix=".current-")
-            try:
-                with os.fdopen(fd, "w") as f:
-                    f.write(version + "\n")
-                os.replace(tmp, self._current_path)
-            except BaseException:
-                if os.path.exists(tmp):
-                    os.unlink(tmp)
-                raise
+            faults.maybe_raise("registry.io", op="promote", version=version)
+            _write_atomic(self._current_path, version + "\n")
             with open(self._history_path, "a") as f:
                 f.write(version + "\n")
+                f.flush()
+                try:
+                    os.fsync(f.fileno())
+                except OSError:
+                    pass
         _count("repro_registry_promotes_total",
                "CURRENT-pointer flips (snapshot promotions).")
 
@@ -143,16 +250,8 @@ class PolicyRegistry:
         with self._lock:
             meta = self.meta(version)
             meta[str(key)] = value
-            vdir = self._vdir(version)
-            fd, tmp = tempfile.mkstemp(dir=vdir, prefix=".meta-")
-            try:
-                with os.fdopen(fd, "w") as f:
-                    json.dump(meta, f, indent=1)
-                os.replace(tmp, os.path.join(vdir, "meta.json"))
-            except BaseException:
-                if os.path.exists(tmp):
-                    os.unlink(tmp)
-                raise
+            _write_atomic(os.path.join(self._vdir(version), "meta.json"),
+                          json.dumps(meta, indent=1))
         return meta
 
     def rollback(self) -> str:
@@ -176,11 +275,57 @@ class PolicyRegistry:
         return prior[-1]
 
     # -- loading -----------------------------------------------------------
-    def load(self, version: Optional[str] = None) -> PrecisionPolicy:
+    def load(self, version: Optional[str] = None,
+             verify: bool = True) -> PrecisionPolicy:
         version = version or self.current_version()
         if version is None:
             raise RuntimeError("registry has no promoted version")
-        return PrecisionPolicy.load(self._vdir(version))
+        faults.maybe_raise("registry.io", op="load", version=version)
+        if verify:
+            self.verify(version)
+        try:
+            return PrecisionPolicy.load(self._vdir(version))
+        except Exception as e:
+            # Structurally unreadable despite passing (or skipping) the
+            # checksum gate — e.g. a pre-checksum snapshot with a
+            # truncated npz. Normalize so fallback logic has one type.
+            raise SnapshotCorrupted(version, f"unreadable ({e})") from e
+
+    def load_last_good(self) -> Tuple[PrecisionPolicy, str, List[str]]:
+        """Newest loadable snapshot: CURRENT first, then promoted
+        history newest-first, then any published-but-never-promoted
+        versions newest-first. Returns (policy, version,
+        corrupt_versions_skipped); raises RuntimeError only when no
+        snapshot in the registry is loadable at all.
+
+        The crash-recovery entry point (service.recovery): a torn
+        publish or corrupted CURRENT target must fall back, not take
+        the server down."""
+        candidates: List[str] = []
+        cur = self.current_version()
+        if cur is not None:
+            candidates.append(cur)
+        candidates.extend(reversed(self.history()))
+        candidates.extend(reversed(self.versions()))
+        seen, ordered = set(), []
+        for v in candidates:
+            if v not in seen:
+                seen.add(v)
+                ordered.append(v)
+        skipped: List[str] = []
+        for v in ordered:
+            try:
+                policy = self.load(v)
+            except SnapshotCorrupted:
+                skipped.append(v)
+                continue
+            except FileNotFoundError:
+                skipped.append(v)
+                continue
+            return policy, v, skipped
+        raise RuntimeError(
+            f"no loadable snapshot in registry {self.root!r} "
+            f"(skipped corrupt: {skipped})")
 
     # -- bootstrap ---------------------------------------------------------
     @classmethod

@@ -202,6 +202,17 @@ class ShadowServer:
         return self.primary.ready
 
     @property
+    def breakers(self):
+        return self.primary.breakers
+
+    @property
+    def last_recovery(self):
+        return self.primary.last_recovery
+
+    def degradation_state(self) -> dict:
+        return self.primary.degradation_state()
+
+    @property
     def auto_step(self) -> bool:
         return self.primary.auto_step
 
@@ -554,7 +565,8 @@ class ShadowServer:
         return self.obs.serve(host=host, port=port,
                               ready_fn=lambda: self.ready,
                               telemetry_fn=self.telemetry.snapshot,
-                              rollout_fn=self.rollout_state)
+                              rollout_fn=self.rollout_state,
+                              health_fn=self.degradation_state)
 
     def close(self) -> None:
         if self._decision_log is not None:

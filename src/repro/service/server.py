@@ -31,20 +31,23 @@ front door (`/metrics`, `/healthz`, `/readyz`).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro import faults
 from repro.core.bandit import QTable
 from repro.core.engine import AutotuneEngine
 from repro.core.executor import resolve_executor
 from repro.core.policy import PrecisionPolicy
 from repro.core.rewards import RewardConfig
-from repro.core.task import Outcome, coerce_task
+from repro.core.task import FAILED, Outcome, coerce_task
 from repro.obs import Observability
 from repro.service.batcher import BatcherConfig, MicroBatcher
+from repro.service.breaker import CLOSED, BreakerConfig, CircuitBreakers
 from repro.service.instrument import ServiceInstruments
 from repro.service.online import OnlineConfig, OnlineLearner
 from repro.service.registry import PolicyRegistry
@@ -64,6 +67,16 @@ class SolveResponse:
     bucket: int
     latency_s: float
     drift: bool                      # this update triggered re-exploration
+    # Fault-tolerance surface (DESIGN.md §11). `seq` is the WAL
+    # sequence number stamped into the trajectory log; recovery replays
+    # records with seq > the last snapshot's. `quarantined` marks a
+    # reward that did NOT train the Q-table (breaker open, non-finite
+    # reward, or deadline expiry).
+    seq: int = 0
+    quarantined: bool = False
+    pinned: bool = False             # selection forced to the safe arm
+    probe: bool = False              # half-open probe of the learned policy
+    expired: bool = False            # request deadline hit before solve
 
 
 @dataclasses.dataclass
@@ -77,6 +90,8 @@ class _InFlight:
     bucket: int
     features: object = None     # context vector (trajectory log)
     t_accept: float = 0.0       # submit() entry (trace: selection span)
+    pinned: bool = False        # breaker forced the safe arm
+    probe: bool = False         # breaker probe (learned policy on trial)
 
 
 def _live_qtable(snapshot: QTable, alpha, seed: int) -> QTable:
@@ -98,7 +113,8 @@ class AutotuneServer:
                  max_retained_responses: int = 65536,
                  executor=None,
                  obs: Union[None, bool, Observability] = None,
-                 auto_step: bool = True):
+                 auto_step: bool = True,
+                 breaker_cfg: BreakerConfig = BreakerConfig()):
         if isinstance(registry, PolicyRegistry):
             self.registry: Optional[PolicyRegistry] = registry
             snapshot = registry.load()
@@ -151,9 +167,25 @@ class AutotuneServer:
         self.learner = OnlineLearner(self.engine, online_cfg,
                                      obs=self.obs)
         self.reward_cfg = reward_cfg
-        self.clock = clock
-        self.batcher = MicroBatcher(self.task, batcher_cfg, clock)
+        # Clock-skew fault site: with a `clock:clock_skew` spec active
+        # the wrapped clock accumulates injected offsets (deadline and
+        # drain logic must survive time jumping forward).
+        self.clock = faults.wrap_clock(clock)
+        self.batcher = MicroBatcher(self.task, batcher_cfg, self.clock)
         self.telemetry = Telemetry()
+        # Graceful degradation (DESIGN.md §11.2): per-bucket circuit
+        # breakers pin selection to the safe all-fp64 arm and quarantine
+        # Q-updates when a bucket's failure/divergence rate trips.
+        self.breakers = CircuitBreakers(
+            breaker_cfg, on_transition=self._on_breaker_transition)
+        self.safe_action = self.live.safe_action
+        # Write-ahead sequencing for crash recovery (service.recovery):
+        # every completed request gets the next seq, stamped into its
+        # trajectory-log record; snapshot() embeds the seq it covers.
+        self.update_seq = 0
+        self.quarantined_updates = 0
+        self.expired_requests = 0
+        self.last_recovery: Optional[dict] = None
         self._instr = (ServiceInstruments(
             self.obs, getattr(self.task, "name", "unknown"),
             self.executor.name) if self.obs is not None else None)
@@ -186,13 +218,24 @@ class AutotuneServer:
         t_accept = self.clock()
         feats = self.task.feature_of(instance)
         state, action, eps, explore = self.select_action(feats)
+        # Breaker routing (DESIGN.md §11.2): while a bucket's breaker is
+        # not closed, non-probe selections are pinned to the safe
+        # all-fp64 arm; probes keep the learned choice so recovery has
+        # evidence to close on. The epsilon-greedy draw above always
+        # happens, so the selection RNG stream is identical whether or
+        # not the breaker interferes.
+        route = self.breakers.on_select(self.task.bucket_key(instance))
+        if route == "pinned":
+            action, explore = self.safe_action, False
         req_id, bucket = self.batcher.submit(
             instance, self.action_space.actions[action], req_id=req_id)
         now = self.clock()
         self._inflight[req_id] = _InFlight(instance, state, action, eps,
                                            explore, now, bucket,
                                            features=feats,
-                                           t_accept=t_accept)
+                                           t_accept=t_accept,
+                                           pinned=(route == "pinned"),
+                                           probe=(route == "probe"))
         self.telemetry.on_submit(bucket, now)
         if self._instr is not None:
             self._instr.on_submit(bucket, action, explore, self.pending)
@@ -203,6 +246,8 @@ class AutotuneServer:
     def step(self, force: bool = False) -> List[SolveResponse]:
         """Pump due micro-batches through solve -> reward -> Q-update."""
         done: List[SolveResponse] = []
+        for entry in self.batcher.expire_overdue():
+            done.append(self._complete_expired(entry))
         for flush in self.batcher.pump(force=force):
             self.telemetry.on_batch(flush.bucket, len(flush.req_ids),
                                     flush.n_rows)
@@ -225,21 +270,62 @@ class AutotuneServer:
         return self.batcher.pending
 
     # -- learn path --------------------------------------------------------
+    @staticmethod
+    def _healthy(rec: Outcome, r: float) -> bool:
+        """Breaker-window health of one solve: FAILED status or any
+        non-finite reward/cost/metric counts as a failure."""
+        if int(rec.status) == FAILED or not math.isfinite(r):
+            return False
+        try:
+            vals = [float(rec.cost)] + [float(v)
+                                        for v in rec.metrics.values()]
+        except (TypeError, ValueError):
+            return False
+        return all(math.isfinite(v) for v in vals)
+
+    def _on_breaker_transition(self, bucket: int, old: str,
+                               new: str) -> None:
+        if self._instr is not None:
+            self._instr.on_breaker_transition(bucket, old, new)
+
     def _complete(self, req_id: int, rec: Outcome,
                   flush=None) -> SolveResponse:
         info = self._inflight.pop(req_id)
         r = self.engine.reward_for(rec, info.action, info.instance)
         t_reward = self.clock()
-        upd = self.learner.update(info.state, info.action, r,
-                                  explore=info.explore)
+        healthy = self._healthy(rec, r)
+        # Quarantine is decided against the breaker state *before* this
+        # outcome is recorded (DESIGN.md §11.2): the probe that closes
+        # the breaker is itself still quarantined, and only traffic
+        # selected after recovery trains the table. Pinned outcomes ran
+        # the safe arm — no evidence about the learned policy — so they
+        # never feed the breaker window.
+        state_before = self.breakers.state(info.bucket)
+        if not info.pinned:
+            self.breakers.on_outcome(info.bucket, healthy,
+                                     probe=info.probe)
+        quarantined = (state_before != CLOSED or info.pinned
+                       or not math.isfinite(r))
+        if quarantined:
+            self.quarantined_updates += 1
+            rpe, drift = 0.0, False
+            if self._instr is not None:
+                self._instr.on_quarantine(info.bucket)
+        else:
+            upd = self.learner.update(info.state, info.action, r,
+                                      explore=info.explore)
+            rpe, drift = upd.rpe, upd.drift
+            self.telemetry.on_update(abs(rpe), drift)
+        self.update_seq += 1
         now = self.clock()
-        self.telemetry.on_update(abs(upd.rpe), upd.drift)
         resp = SolveResponse(
             request_id=req_id, action=info.action,
             action_names=self.action_space.names(info.action),
             record=rec, reward=r, state=info.state, eps=info.eps,
             policy_version=self.policy_version, bucket=info.bucket,
-            latency_s=now - info.submitted_at, drift=upd.drift)
+            latency_s=now - info.submitted_at, drift=drift,
+            seq=self.update_seq, quarantined=quarantined,
+            pinned=info.pinned, probe=info.probe)
         self.telemetry.on_response(resp.latency_s, resp.action_names,
                                    resp.action, r, now,
                                    bucket=info.bucket,
@@ -247,7 +333,38 @@ class AutotuneServer:
         if self._instr is not None:
             self._instr.on_complete(resp, info, flush, self.telemetry,
                                     t_reward, now)
-        self._responses[req_id] = resp
+        return self._deliver(resp)
+
+    def _complete_expired(self, entry) -> SolveResponse:
+        """Terminal FAILED response for a request whose batcher deadline
+        expired before it was solved. No Q-update (quarantined), no
+        breaker evidence — the solve never ran."""
+        info = self._inflight.pop(entry.req_id)
+        self.expired_requests += 1
+        self.update_seq += 1
+        rec = Outcome(status=FAILED, cost=0.0, metrics={"expired": 1.0})
+        r = float(getattr(self.reward_cfg, "fail_reward", -30.0))
+        now = self.clock()
+        resp = SolveResponse(
+            request_id=entry.req_id, action=info.action,
+            action_names=self.action_space.names(info.action),
+            record=rec, reward=r, state=info.state, eps=info.eps,
+            policy_version=self.policy_version, bucket=info.bucket,
+            latency_s=now - info.submitted_at, drift=False,
+            seq=self.update_seq, quarantined=True,
+            pinned=info.pinned, probe=info.probe, expired=True)
+        self.telemetry.on_response(resp.latency_s, resp.action_names,
+                                   resp.action, r, now,
+                                   bucket=info.bucket,
+                                   status=int(rec.status))
+        if self._instr is not None:
+            self._instr.on_expired(info.bucket)
+            self._instr.on_complete(resp, info, None, self.telemetry,
+                                    now, now)
+        return self._deliver(resp)
+
+    def _deliver(self, resp: SolveResponse) -> SolveResponse:
+        self._responses[resp.request_id] = resp
         while len(self._responses) > self._max_retained:
             self._responses.popitem(last=False)
             self.responses_evicted += 1
@@ -272,6 +389,23 @@ class AutotuneServer:
         seen = set(self.telemetry.requests_per_bucket)
         return bool(warmed) and seen <= warmed
 
+    def degradation_state(self) -> dict:
+        """Fault-tolerance surface for `/healthz` + `/readyz`
+        (DESIGN.md §11): open breakers per bucket, quarantine/expiry
+        counters, and what the last crash recovery replayed."""
+        open_buckets = self.breakers.open_buckets()
+        out = {
+            "degraded": bool(open_buckets),
+            "breakers": self.breakers.describe(),
+            "open_buckets": open_buckets,
+            "quarantined_updates": self.quarantined_updates,
+            "expired_requests": self.expired_requests,
+            "update_seq": self.update_seq,
+        }
+        if self.last_recovery is not None:
+            out["last_recovery"] = dict(self.last_recovery)
+        return out
+
     def serve_obs(self, host: str = "127.0.0.1", port: int = 0):
         """Open the HTTP observability surface (`/metrics`, `/healthz`,
         `/readyz`, `/telemetry`, `/trace`); returns the `ObsHTTPServer`
@@ -280,7 +414,8 @@ class AutotuneServer:
             raise RuntimeError("server was built with obs=False")
         return self.obs.serve(host=host, port=port,
                               ready_fn=lambda: self.ready,
-                              telemetry_fn=self.telemetry.snapshot)
+                              telemetry_fn=self.telemetry.snapshot,
+                              health_fn=self.degradation_state)
 
     # -- snapshotting ------------------------------------------------------
     def snapshot(self, note: str = "online snapshot") -> str:
@@ -298,6 +433,15 @@ class AutotuneServer:
             extra_meta={"task": getattr(self.task, "name", "unknown"),
                         "online_updates": tel.updates,
                         "drift_events": tel.drift_events,
+                        # Crash-recovery watermark (service.recovery):
+                        # this snapshot covers every trajectory-log
+                        # record with seq <= wal.seq; replay resumes
+                        # after it, with epsilon restored.
+                        "wal": {
+                            "seq": self.update_seq,
+                            "eps_level": self.learner.epsilon._level,
+                            "eps_t": self.learner.epsilon._t,
+                        },
                         "telemetry": {
                             "responses": tel.responses,
                             "reward_ewma": tel.reward_ewma.value,

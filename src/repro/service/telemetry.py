@@ -7,6 +7,7 @@ samples so a long-running server never grows without bound.
 """
 from __future__ import annotations
 
+import math
 from collections import deque
 from typing import Dict, Optional
 
@@ -100,8 +101,12 @@ class Telemetry:
             self.usage[name] = self.usage.get(name, 0) + 1
         self.action_counts[int(action)] = \
             self.action_counts.get(int(action), 0) + 1
-        self.reward_ewma.update(reward)
-        self.reward_sum += float(reward)
+        # A NaN reward would poison both aggregates permanently (NaN is
+        # absorbing under += and EWMA); injected-NaN outcomes still count
+        # as responses above, they just don't move the reward telemetry.
+        if math.isfinite(float(reward)):
+            self.reward_ewma.update(reward)
+            self.reward_sum += float(reward)
         if self._wall is None:
             self._wall = (now, now)
         else:

@@ -1,0 +1,391 @@
+"""Fault injection (DESIGN.md §11.3) + graceful degradation (§11.2).
+
+Unit layer: the injector's deterministic schedules (seeded streams,
+`p`/`after`/`max_fires`/`match` semantics, REPRO_FAULTS parsing) and
+the per-bucket circuit-breaker FSM in isolation.
+
+Integration layer (acceptance): a stream with injected NaN outcomes on
+every non-safe arm trips the breaker; while open, pinned responses are
+bit-identical to what a healthy all-fp64 server returns for the same
+instances; no poisoned reward ever reaches the Q-table; probes close
+the breaker once the fault exhausts and learning resumes. Plus a
+REPRO_FAULTS-style chaos stream the server must survive.
+"""
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.core import GMRESIREnv, TrainConfig, W1, reduced_action_space
+from repro.core.task import FAILED, Outcome
+from repro.data import generate_dense_set
+from repro.faults import FaultInjected, FaultInjector, FaultSpec
+from repro.obs import MetricsRegistry, Observability
+from repro.service import (AutotuneServer, BatcherConfig, BreakerConfig,
+                           OnlineConfig, PolicyRegistry)
+from repro.service.breaker import (CLOSED, HALF_OPEN, OPEN,
+                                   CircuitBreakers)
+from repro.solvers import IRConfig
+
+SPACE = reduced_action_space()
+IR = IRConfig(tau=1e-6)
+BCFG = BatcherConfig(max_batch=1, max_wait_s=0.0, bucket_step=16,
+                     min_bucket=16)
+# eps=0 everywhere in this module: selection must be deterministic so
+# the degraded-vs-healthy comparison is exact.
+OCFG = OnlineConfig(eps0=0.0, eps_min=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Injector units
+# ---------------------------------------------------------------------------
+
+def test_spec_validation_rejects_unknown_site_and_kind():
+    with pytest.raises(ValueError, match="site"):
+        FaultSpec("nope.where", "nan")
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec("batcher.flush", "explode")
+
+
+def test_deterministic_schedule_per_seed():
+    def schedule(seed):
+        inj = FaultInjector([FaultSpec("batcher.flush", "raise", p=0.3)],
+                            seed=seed)
+        return [inj.fire("batcher.flush") is not None for _ in range(200)]
+
+    assert schedule(7) == schedule(7)
+    assert schedule(7) != schedule(8)
+    assert any(schedule(7)) and not all(schedule(7))
+
+
+def test_after_and_max_fires_window():
+    inj = FaultInjector([FaultSpec("trajlog.write", "io_error",
+                                   after=2, max_fires=2)])
+    fired = [inj.fire("trajlog.write") is not None for _ in range(6)]
+    # Hits 1-2 skipped by `after`, 3-4 fire, 5-6 exhausted.
+    assert fired == [False, False, True, True, False, False]
+    assert inj.counts()[("trajlog.write", "io_error")] == (6, 2)
+
+
+def test_match_predicate_filters_and_fails_closed():
+    inj = FaultInjector([FaultSpec("solver.outcome", "nan",
+                                   match=lambda ctx: ctx["bucket"] == 16)])
+    assert inj.fire("solver.outcome", bucket=32) is None
+    assert inj.fire("solver.outcome", bucket=16) is not None
+    # A raising predicate must not take the site down: the spec just
+    # doesn't fire.
+    broken = FaultInjector([FaultSpec("solver.outcome", "nan",
+                                      match=lambda ctx: ctx["missing"])])
+    assert broken.fire("solver.outcome", bucket=16) is None
+
+
+def test_first_matching_spec_wins_and_sites_are_independent():
+    inj = FaultInjector([FaultSpec("registry.io", "io_error", max_fires=1),
+                         FaultSpec("registry.io", "raise"),
+                         FaultSpec("clock", "clock_skew")])
+    assert inj.fire("registry.io").kind == "io_error"
+    assert inj.fire("registry.io").kind == "raise"    # first one exhausted
+    assert inj.fire("clock").kind == "clock_skew"
+    assert inj.fire("http.request") is None
+
+
+def test_from_env_parses_the_documented_grammar():
+    inj = faults.from_env("solver.outcome:divergence:p=0.15;"
+                          " trajlog.write:io_error:max=3:after=1;"
+                          "clock:clock_skew:value=2.5", seed=3)
+    assert [s.site for s in inj.specs] == ["solver.outcome",
+                                          "trajlog.write", "clock"]
+    assert inj.specs[0].p == 0.15
+    assert inj.specs[1].max_fires == 3 and inj.specs[1].after == 1
+    assert inj.specs[2].value == 2.5
+    with pytest.raises(ValueError, match="site:kind"):
+        faults.from_env("justasite")
+    with pytest.raises(ValueError, match="unknown fault option"):
+        faults.from_env("batcher.flush:raise:frequency=9")
+
+
+def test_env_plan_activates_lazily(monkeypatch):
+    monkeypatch.setenv(faults.ENV_PLAN, "batcher.flush:raise:p=0.5")
+    monkeypatch.setenv(faults.ENV_SEED, "11")
+    faults.uninstall()            # re-arm env discovery
+    try:
+        inj = faults.active()
+        assert inj is not None and inj.seed == 11
+        assert inj.specs[0].site == "batcher.flush"
+        assert faults.active() is inj          # parsed once, cached
+    finally:
+        monkeypatch.delenv(faults.ENV_PLAN)
+        monkeypatch.delenv(faults.ENV_SEED)
+        faults.uninstall()
+
+
+def test_injected_restores_previous_injector(monkeypatch):
+    monkeypatch.delenv(faults.ENV_PLAN, raising=False)
+    faults.uninstall()
+    assert faults.active() is None
+    with faults.injected(FaultSpec("http.request", "raise")) as outer:
+        assert faults.active() is outer
+        with faults.injected(FaultSpec("clock", "clock_skew")) as inner:
+            assert faults.active() is inner
+        assert faults.active() is outer
+    assert faults.active() is None
+
+
+def test_maybe_raise_kinds():
+    faults.maybe_raise("http.request")      # no injector: no-op
+    with faults.injected(FaultSpec("http.request", "raise")):
+        with pytest.raises(FaultInjected):
+            faults.maybe_raise("http.request")
+    with faults.injected(FaultSpec("registry.io", "io_error")):
+        with pytest.raises(OSError):
+            faults.maybe_raise("registry.io")
+    with faults.injected(FaultSpec("batcher.flush", "delay", value=0.0)):
+        faults.maybe_raise("batcher.flush")  # returns after the sleep
+
+
+def test_corrupt_outcome_nan_and_divergence():
+    out = Outcome(status=0, cost=12.5, metrics={"ferr": 1e-9, "n_gmres": 8})
+    assert faults.corrupt_outcome("solver.outcome", out) is out  # inert
+
+    with faults.injected(FaultSpec("solver.outcome", "nan")):
+        bad = faults.corrupt_outcome("solver.outcome", out)
+    assert bad.status == 0                   # healthy-looking status
+    assert math.isnan(bad.cost)
+    assert all(math.isnan(v) for v in bad.metrics.values())
+
+    with faults.injected(FaultSpec("solver.outcome", "divergence")):
+        div = faults.corrupt_outcome("solver.outcome", out)
+    assert div.status == FAILED
+    assert all(math.isinf(v) for v in div.metrics.values())
+
+
+def test_wrap_clock_accumulates_skew():
+    base = [100.0]
+    clock = faults.wrap_clock(lambda: base[0])
+    assert clock() == 100.0                  # transparent with no injector
+    with faults.injected(FaultSpec("clock", "clock_skew", value=2.0,
+                                   max_fires=3)):
+        reads = [clock() for _ in range(5)]
+    assert reads == [102.0, 104.0, 106.0, 106.0, 106.0]
+    assert clock() == 106.0                  # skew persists, stops growing
+
+
+def test_fires_are_counted_on_the_default_registry():
+    from repro.obs.metrics import default_registry
+    with faults.injected(FaultSpec("executor.dispatch", "delay",
+                                   value=0.0)):
+        faults.maybe_raise("executor.dispatch")
+    fams = {f.name: f for f in default_registry().collect()}
+    assert "repro_faults_injected_total" in fams
+
+
+# ---------------------------------------------------------------------------
+# Breaker FSM units
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    base = dict(window=8, min_samples=4, failure_threshold=0.5,
+                probe_interval=3, probe_successes=2)
+    base.update(kw)
+    return BreakerConfig(**base)
+
+
+def test_breaker_trips_after_min_samples_and_pins_with_probe_cadence():
+    log = []
+    br = CircuitBreakers(_cfg(), on_transition=lambda b, o, n:
+                         log.append((b, o, n)))
+    for _ in range(3):
+        assert br.on_outcome(16, healthy=False) == CLOSED  # below min
+    assert br.on_outcome(16, healthy=False) == OPEN
+    assert log == [(16, CLOSED, OPEN)]
+    assert br.open_buckets() == [16]
+    assert br.state(32) == CLOSED            # per-bucket isolation
+    # Every probe_interval-th selection probes; the rest are pinned.
+    routes = [br.on_select(16) for _ in range(6)]
+    assert routes == ["pinned", "pinned", "probe",
+                      "pinned", "pinned", "probe"]
+    assert br.state(16) == HALF_OPEN         # first probe half-opens
+    assert br.describe()["16"]["times_opened"] == 1
+
+
+def test_breaker_closes_on_probe_streak_and_reopens_on_probe_failure():
+    br = CircuitBreakers(_cfg())
+    for _ in range(4):
+        br.on_outcome(16, healthy=False)
+    assert br.state(16) == OPEN
+    [br.on_select(16) for _ in range(3)]     # reach the first probe
+    assert br.on_outcome(16, healthy=True, probe=True) == HALF_OPEN
+    # A failed probe resets the streak and falls back to open.
+    assert br.on_outcome(16, healthy=False, probe=True) == OPEN
+    [br.on_select(16) for _ in range(3)]
+    assert br.on_outcome(16, healthy=True, probe=True) == HALF_OPEN
+    assert br.on_outcome(16, healthy=True, probe=True) == CLOSED
+    assert br.open_buckets() == []
+    # Pinned traffic never feeds the window: these carry no evidence.
+    br2 = CircuitBreakers(_cfg())
+    for _ in range(4):
+        br2.on_outcome(16, healthy=False)
+    for _ in range(50):
+        br2.on_outcome(16, healthy=True, probe=False)   # pinned outcomes
+    assert br2.state(16) != CLOSED
+
+
+def test_breaker_disabled_is_transparent():
+    br = CircuitBreakers(BreakerConfig(enabled=False))
+    for _ in range(64):
+        br.on_outcome(16, healthy=False)
+    assert br.state(16) == CLOSED
+    assert br.on_select(16) == "normal"
+    assert br.open_buckets() == []
+
+
+# ---------------------------------------------------------------------------
+# Integration: NaN poisoning -> breaker -> safe arm (acceptance e2e)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fault_reg(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("faultreg") / "reg")
+    train = generate_dense_set(6, np.random.default_rng(1),
+                               n_range=(12, 12), log10_kappa_range=(1, 3))
+    env = GMRESIREnv(train, SPACE, IR, chunk=4, bucket_step=16)
+    PolicyRegistry.warm_start(root, env, W1, TrainConfig(episodes=2))
+    return root, train
+
+
+def _serve_one(srv, inst):
+    rid = srv.submit(inst)
+    resp = srv.poll(rid)
+    if resp is None:
+        srv.drain()
+        resp = srv.poll(rid)
+    assert resp is not None
+    return resp
+
+
+def test_injected_nan_trips_breaker_pins_safe_arm_then_recovers(fault_reg):
+    root, train = fault_reg
+    stream = [train[i % len(train)] for i in range(26)]
+
+    # Healthy reference: a zeroed Q-row tie-breaks to the highest index
+    # = the all-fp64 safe arm (pinned by test_qtable), so this server
+    # answers every request with the safe arm.
+    ref_srv = AutotuneServer(PolicyRegistry(root), reward_cfg=W1,
+                             batcher_cfg=BCFG, online_cfg=OCFG, seed=0,
+                             obs=False)
+    refs = []
+    for inst in stream:
+        ref_srv.live.qtable.Q[:] = 0.0       # learning must not unpin
+        refs.append(_serve_one(ref_srv, inst))
+    assert all(r.action == ref_srv.safe_action for r in refs)
+
+    # Degraded server: greedy pinned to arm 0 (a reduced-precision
+    # arm), and every solve on a non-safe arm returns NaN metrics.
+    srv = AutotuneServer(
+        PolicyRegistry(root), reward_cfg=W1, batcher_cfg=BCFG,
+        online_cfg=OCFG, seed=0, obs=True,
+        breaker_cfg=BreakerConfig(window=8, min_samples=4,
+                                  failure_threshold=0.5, probe_interval=2,
+                                  probe_successes=2))
+    srv.live.qtable.Q[:] = 0.0
+    srv.live.qtable.Q[:, 0] = 1.0
+    safe_row = srv.action_space.actions[srv.safe_action]
+    n_before = srv.live.qtable.N.sum()
+
+    def not_safe_arm(ctx):
+        return not bool((np.asarray(ctx["action_row"]) == safe_row).all())
+
+    with faults.injected(FaultSpec("solver.outcome", "nan",
+                                   match=not_safe_arm, max_fires=10)):
+        resps = [_serve_one(srv, inst) for inst in stream]
+
+    bucket = resps[0].bucket
+    desc = srv.breakers.describe()[str(bucket)]
+    assert desc["times_opened"] == 1, desc
+
+    # While poisoned+closed: NaN rewards are quarantined, never trained.
+    poisoned = [r for r in resps if math.isnan(r.reward)]
+    assert poisoned and all(r.quarantined for r in poisoned)
+    assert np.isfinite(srv.live.qtable.Q).all()
+    assert np.isfinite(srv.live.qtable.N).all()
+
+    # Acceptance: every pinned response is bit-identical to the healthy
+    # all-fp64 server's answer for the same instance.
+    pinned = [(i, r) for i, r in enumerate(resps) if r.pinned]
+    assert pinned, "breaker never pinned traffic"
+    for i, r in pinned:
+        ref = refs[i]
+        assert r.action == srv.safe_action == ref.action
+        assert r.quarantined and not r.probe
+        assert r.record.status == ref.record.status
+        assert r.reward == ref.reward        # bit-identical float64
+        assert r.record.cost == ref.record.cost
+        for k, v in ref.record.metrics.items():
+            assert r.record.metrics[k] == v, (i, k)
+
+    # The fault exhausted (max_fires) -> healthy probes closed the
+    # breaker -> learning resumed on post-recovery traffic.
+    assert srv.breakers.state(bucket) == CLOSED
+    assert not resps[-1].quarantined and not resps[-1].pinned
+    assert srv.live.qtable.N.sum() > n_before
+    assert srv.update_seq == len(stream)     # every completion sequenced
+
+    deg = srv.degradation_state()
+    assert deg["degraded"] is False
+    assert deg["quarantined_updates"] == sum(r.quarantined for r in resps)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_chaos_stream_server_survives(fault_reg, tmp_path, seed):
+    """REPRO_FAULTS-style chaos plan: mixed NaN/divergence/raise/io/skew
+    faults; the server must answer every admitted request eventually,
+    keep the Q-table finite, and end with nothing stuck in the queue."""
+    root, train = fault_reg
+    obs = Observability(registry=MetricsRegistry(),
+                        trajectory_path=str(tmp_path / f"chaos{seed}.jsonl"))
+    srv = AutotuneServer(PolicyRegistry(root), reward_cfg=W1,
+                         batcher_cfg=BCFG, online_cfg=OCFG, seed=seed,
+                         obs=obs,
+                         breaker_cfg=BreakerConfig(window=8, min_samples=4,
+                                                   failure_threshold=0.5,
+                                                   probe_interval=2,
+                                                   probe_successes=2))
+    # The CI chaos job varies REPRO_FAULTS_SEED (and may override the
+    # plan) so every matrix entry sees a different deterministic
+    # schedule; locally the built-in plan and seeds run.
+    plan = os.environ.get(faults.ENV_PLAN) or (
+        "solver.outcome:nan:p=0.2;solver.outcome:divergence:p=0.1;"
+        "batcher.flush:raise:p=0.15;trajlog.write:io_error:p=0.2;"
+        "clock:clock_skew:p=0.1:value=0.5")
+    seed = seed ^ int(os.environ.get(faults.ENV_SEED, "0") or 0)
+    inj = faults.from_env(plan, seed=seed)
+    faults.install(inj)
+    rids = []
+    try:
+        for i in range(24):
+            try:
+                rids.append(srv.submit(train[i % len(train)]))
+            except FaultInjected:
+                continue          # flush raised through auto_step: retry
+            for _ in range(20):   # injected flush failures are retryable
+                try:
+                    srv.drain()
+                    break
+                except FaultInjected:
+                    pass
+    finally:
+        faults.uninstall()
+    srv.drain()                   # fault-free final drain
+    resps = [srv.poll(rid) for rid in rids]
+    assert all(r is not None for r in resps), "an admitted request was lost"
+    assert srv.pending == 0
+    assert np.isfinite(srv.live.qtable.Q).all()
+    # Non-finite rewards never train; divergence (finite fail_reward)
+    # legitimately may.
+    for r in resps:
+        if not math.isfinite(r.reward):
+            assert r.quarantined
+    # The injector saw traffic: solver.outcome is hit on every flush.
+    assert sum(h for h, _ in inj.counts().values()) > 0

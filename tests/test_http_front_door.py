@@ -279,6 +279,90 @@ def test_graceful_drain_answers_admitted_requests(http_root):
         assert fd._done[rid]["status"] == "done"
 
 
+def test_drain_deadline_expiry_fails_pending_terminally(http_root):
+    """A wedged solver cannot hold shutdown hostage: whatever is still
+    unanswered when `drain_timeout_s` passes gets a terminal failure
+    response — sync callers see 503, fire-and-poll callers find the
+    failure in the done store — and nothing stays pending forever."""
+    from repro import faults
+    from repro.faults import FaultSpec
+
+    # Nothing may flush on its own (huge max_wait, roomy max_batch):
+    # the wedged drain must be the only way out.
+    stuck = BatcherConfig(max_batch=64, max_wait_s=100.0, bucket_step=16,
+                          min_bucket=16)
+    srv = AutotuneServer(PolicyRegistry(http_root), IR, W1, stuck,
+                         OnlineConfig(), seed=0, obs=False)
+    fd = serve_http(srv, cfg=HttpConfig(max_n=64, flush_interval_s=10.0,
+                                        drain_timeout_s=0.3,
+                                        sync_timeout_s=30.0))
+    systems = _systems(3, seed=18)
+    rids = []
+    for system in systems[:2]:
+        code, body, _ = _http("POST", fd.url + "/v1/solve",
+                              _payload(system))
+        assert code == 202
+        rids.append(body["request_id"])
+
+    sync_out = {}
+
+    def sync_call():
+        code, body, _ = _http("POST", fd.url + "/v1/solve:sync",
+                              _payload(systems[2]))
+        sync_out["code"], sync_out["body"] = code, body
+
+    t = threading.Thread(target=sync_call)
+    t.start()
+    deadline = time.monotonic() + 10.0
+    while len(fd._pending) < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)          # wait for the sync request to admit
+    assert len(fd._pending) == 3
+
+    # Every flush attempt during the drain raises: the deadline, not a
+    # successful drain, ends the shutdown.
+    with faults.injected(FaultSpec("batcher.flush", "raise")):
+        fd.close()
+    t.join(timeout=10.0)
+    assert not t.is_alive()
+
+    assert not fd._pending
+    for rid in rids:
+        payload = fd._done[rid]
+        assert payload["status"] == "failed"
+        assert "error" in payload
+    assert sync_out["code"] == 503, sync_out
+    assert sync_out["body"]["status"] == "failed"
+
+
+def test_flush_loop_supervisor_restarts_after_crash(http_root):
+    """An exception escaping the background flush loop is counted and
+    the loop restarted — requests admitted around the crash still get
+    answered."""
+    from repro import faults
+    from repro.faults import FaultSpec
+
+    # max_wait keeps the flush out of submit()'s auto-step (which would
+    # turn the injected raise into a 500): only the background loop,
+    # whose supervisor is under test, ever flushes.
+    lazy = BatcherConfig(max_batch=4, max_wait_s=0.05, bucket_step=16,
+                         min_bucket=16)
+    srv = AutotuneServer(PolicyRegistry(http_root), IR, W1, lazy,
+                         OnlineConfig(), seed=0, obs=False)
+    fd = serve_http(srv, cfg=HttpConfig(max_n=64, flush_interval_s=0.005))
+    try:
+        with faults.injected(FaultSpec("batcher.flush", "raise",
+                                       max_fires=2)):
+            sys0 = _systems(1, seed=19)[0]
+            code, body, _ = _http("POST", fd.url + "/v1/solve",
+                                  _payload(sys0))
+            assert code == 202
+            result = _await_result(fd.url, body["request_id"])
+        assert result["status"] == "done"
+        assert fd.flush_restarts >= 1
+    finally:
+        fd.close()
+
+
 def test_draining_rejects_new_work(front_door):
     sys0 = _systems(1, seed=17)[0]
     front_door._draining = True

@@ -510,7 +510,13 @@ def test_http_front_door_live_scrape(warm_root):
         assert srv.serve_obs() is http         # idempotent
 
         code, body, _ = _get(http.url + "/healthz")
-        assert code == 200 and json.loads(body) == {"status": "ok"}
+        health = json.loads(body)
+        assert code == 200 and health["status"] == "ok"
+        # Degradation surface (DESIGN.md §11.2) rides on /healthz: a
+        # fresh server has no open breakers and nothing quarantined.
+        assert health["open_buckets"] == [] and health["breakers"] == {}
+        assert health["quarantined_updates"] == 0
+        assert health["expired_requests"] == 0
 
         # Unready until the bucket grid is warm (nothing flushed yet).
         code, body, _ = _get(http.url + "/readyz")

@@ -1,0 +1,296 @@
+"""Crash-safe learner state (DESIGN.md §11.1).
+
+Registry layer: checksummed snapshots, corrupt/torn-publish detection,
+`load_last_good` fallback, and publish under injected registry I/O
+faults. Log layer: the fsync knob and torn-tail tolerance of the
+trajectory log. Recovery layer: WAL-tail replay restores bit-identical
+Q/N/epsilon state, heals a corrupt CURRENT, and (with `verify_with`)
+refuses a tampered log.
+
+Acceptance e2e: a serving subprocess is SIGKILLed mid-stream; restarting
+against the same registry + log recovers learner state bit-identical to
+an independent deterministic replay of the full durable log.
+"""
+import json
+import os
+import shutil
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.core import GMRESIREnv, TrainConfig, W1, reduced_action_space
+from repro.data import generate_dense_set
+from repro.faults import FaultSpec
+from repro.obs import MetricsRegistry, Observability
+from repro.obs.trajlog import TrajectoryLog
+from repro.service import (AutotuneServer, BatcherConfig, PolicyRegistry,
+                           SnapshotCorrupted, recover_server,
+                           replay_wal_tail)
+from repro.solvers import IRConfig
+
+SPACE = reduced_action_space()
+IR = IRConfig(tau=1e-6)
+BCFG = BatcherConfig(max_batch=2, max_wait_s=0.0, bucket_step=16,
+                     min_bucket=16)
+
+
+@pytest.fixture(scope="module")
+def recovery_template(tmp_path_factory):
+    """Warm-started registry template; tests copy it so mutations
+    (publishes, deliberate corruption) stay isolated."""
+    root = str(tmp_path_factory.mktemp("recov") / "reg")
+    train = generate_dense_set(6, np.random.default_rng(1),
+                               n_range=(12, 12), log10_kappa_range=(1, 3))
+    env = GMRESIREnv(train, SPACE, IR, chunk=4, bucket_step=16)
+    PolicyRegistry.warm_start(root, env, W1, TrainConfig(episodes=2))
+    return root, train
+
+
+@pytest.fixture()
+def reg_copy(recovery_template, tmp_path):
+    root, train = recovery_template
+    dst = str(tmp_path / "reg")
+    shutil.copytree(root, dst)
+    return PolicyRegistry(dst), train
+
+
+def _corrupt(reg, version, fname="qtable.npz"):
+    with open(os.path.join(reg.root, "versions", version, fname), "wb") as f:
+        f.write(b"garbage")
+
+
+# ---------------------------------------------------------------------------
+# Registry: checksums, fallback, faulted publish
+# ---------------------------------------------------------------------------
+
+def test_verify_catches_checksum_mismatch(reg_copy):
+    reg, _ = reg_copy
+    assert reg.verify("v0001")["version"] == "v0001"
+    _corrupt(reg, "v0001")
+    with pytest.raises(SnapshotCorrupted):
+        reg.verify("v0001")
+    with pytest.raises(SnapshotCorrupted):
+        reg.load("v0001")                   # load verifies by default
+
+
+def test_load_last_good_skips_corrupt_and_torn_snapshots(reg_copy):
+    reg, _ = reg_copy
+    good = reg.load()
+    reg.publish(good, note="published, never promoted")   # v0002
+    # Torn publish: a version directory without the meta.json commit
+    # record (the crash window before the atomic meta write).
+    torn = os.path.join(reg.root, "versions", "v0003")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "qtable.npz"), "wb") as f:
+        f.write(b"partial")
+    _corrupt(reg, "v0001")           # CURRENT itself is now corrupt
+    policy, version, corrupt = reg.load_last_good()
+    # Search order: CURRENT (corrupt) -> promoted history (same) ->
+    # unpromoted versions newest-first (v0003 torn, v0002 intact).
+    assert version == "v0002"
+    assert "v0001" in corrupt and "v0003" in corrupt
+    assert policy.qtable.Q.shape == good.qtable.Q.shape
+
+
+def test_publish_under_io_fault_leaves_registry_loadable(reg_copy):
+    reg, _ = reg_copy
+    before = reg.current_version()
+    policy = reg.load()              # load outside the faulted window
+    with faults.injected(FaultSpec("registry.io", "io_error")):
+        with pytest.raises(OSError):
+            reg.publish(policy, note="doomed")
+    # Whatever the fault tore, fallback still restores a good snapshot
+    # and CURRENT was not moved (meta is the last write).
+    assert reg.current_version() == before
+    _, version, _ = reg.load_last_good()
+    assert version == before
+
+
+# ---------------------------------------------------------------------------
+# Trajectory log: fsync knob + torn tail
+# ---------------------------------------------------------------------------
+
+def test_trajlog_sync_levels_roundtrip(tmp_path):
+    rec = {"request_id": 1, "task": "t", "reward": -1.5, "seq": 1}
+    for sync in ("none", "rotate", "always"):
+        path = str(tmp_path / f"log_{sync}.jsonl")
+        log = TrajectoryLog(path, sync=sync)
+        log.append(rec)
+        log.close()
+        assert [r["seq"] for r in TrajectoryLog.read(path)] == [1]
+    with pytest.raises(ValueError, match="sync"):
+        TrajectoryLog(str(tmp_path / "bad.jsonl"), sync="sometimes")
+
+
+def test_trajlog_read_skips_torn_tail(tmp_path):
+    path = str(tmp_path / "torn.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"seq": 1, "reward": 0.5}) + "\n")
+        f.write(json.dumps({"seq": 2, "reward": 0.25}) + "\n")
+        f.write('{"seq": 3, "rew')        # crash mid-append
+    assert [r["seq"] for r in TrajectoryLog.read(path)] == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Recovery: WAL-tail replay, healing, verified restore
+# ---------------------------------------------------------------------------
+
+def _serve(reg, log_path, n_requests, snapshot_at, train, seed=7):
+    obs = Observability(registry=MetricsRegistry(), trajectory_path=log_path,
+                        trajectory_sync="always")
+    srv = AutotuneServer(reg, reward_cfg=W1, batcher_cfg=BCFG, obs=obs,
+                        seed=seed)
+    rid2inst = {}
+    for i in range(n_requests):
+        inst = train[i % len(train)]
+        rid2inst[srv.submit(inst)] = inst
+        srv.drain()
+        if i == snapshot_at:
+            srv.snapshot("mid-stream")
+    return srv, rid2inst
+
+
+def test_recover_restores_bit_exact_state_heals_and_verifies(
+        reg_copy, tmp_path):
+    reg, train = reg_copy
+    log = str(tmp_path / "traj.jsonl")
+    srv, rid2inst = _serve(reg, log, n_requests=30, snapshot_at=10,
+                           train=train)
+    q_live = srv.live.qtable.Q.copy()
+    n_live = srv.live.qtable.N.copy()
+    eps_live = srv.learner.epsilon.value
+    srv.obs.trajlog.close()          # crash: the server is abandoned
+
+    # 1. Plain recovery, with the tail re-solved and checked through
+    #    eval.replay before it is applied.
+    obs2 = Observability(registry=MetricsRegistry())
+    rec = recover_server(reg, log, reward_cfg=W1, batcher_cfg=BCFG,
+                         obs=obs2, seed=7, verify_with=rid2inst)
+    assert np.array_equal(rec.live.qtable.Q, q_live)
+    assert np.array_equal(rec.live.qtable.N, n_live)
+    assert rec.update_seq == srv.update_seq == 30
+    assert abs(rec.learner.epsilon.value - eps_live) < 1e-15
+    lr = rec.last_recovery
+    assert lr["version"] == "v0002" and not lr["healed_current"]
+    assert lr["snapshot_seq"] == 11          # snapshot after request 11
+    assert lr["skipped_stale"] == 11
+    assert lr["replayed"] + lr["skipped_quarantined"] == 19
+    assert "repro_recovery_total" in {f.name for f in
+                                      obs2.registry.collect()}
+
+    # 2. CURRENT points at a corrupt snapshot: recovery heals it and
+    #    replays the full log from the older watermark — same state.
+    cur = reg.current_version()
+    _corrupt(reg, cur)
+    rec2 = recover_server(reg, log, reward_cfg=W1, batcher_cfg=BCFG,
+                          obs=Observability(registry=MetricsRegistry()),
+                          seed=7)
+    lr2 = rec2.last_recovery
+    assert lr2["healed_current"] and cur in lr2["corrupt_versions"]
+    assert reg.current_version() != cur
+    assert lr2["snapshot_seq"] == 0          # v0001 predates the WAL
+    assert np.array_equal(rec2.live.qtable.Q, q_live)
+    assert np.array_equal(rec2.live.qtable.N, n_live)
+
+    # 3. A tampered log fails verified recovery (and counts it).
+    tampered = str(tmp_path / "tampered.jsonl")
+    lines = [json.loads(ln) for ln in open(log) if ln.strip()]
+    lines[-1]["reward"] = float(lines[-1]["reward"]) + 1.0
+    with open(tampered, "w") as f:
+        for ln in lines:
+            f.write(json.dumps(ln) + "\n")
+    obs3 = Observability(registry=MetricsRegistry())
+    with pytest.raises(AssertionError):
+        recover_server(reg, tampered, reward_cfg=W1, batcher_cfg=BCFG,
+                       obs=obs3, seed=7, verify_with=rid2inst)
+    fam = {f.name: f for f in obs3.registry.collect()}
+    assert "repro_recovery_total" in fam
+
+
+# ---------------------------------------------------------------------------
+# Acceptance e2e: SIGKILL mid-stream, recover, diff against full replay
+# ---------------------------------------------------------------------------
+
+_CHILD = """\
+import sys
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+from repro.core import GMRESIREnv, TrainConfig, W1, reduced_action_space
+from repro.data import generate_dense_set
+from repro.obs import MetricsRegistry, Observability
+from repro.service import AutotuneServer, BatcherConfig, PolicyRegistry
+from repro.solvers import IRConfig
+
+root, log = sys.argv[1], sys.argv[2]
+train = generate_dense_set(6, np.random.default_rng(1), n_range=(12, 12),
+                           log10_kappa_range=(1, 3))
+env = GMRESIREnv(train, reduced_action_space(), IRConfig(tau=1e-6),
+                 chunk=4, bucket_step=16)
+reg, _, _ = PolicyRegistry.warm_start(root, env, W1, TrainConfig(episodes=2))
+obs = Observability(registry=MetricsRegistry(), trajectory_path=log,
+                    trajectory_sync="always")
+bc = BatcherConfig(max_batch=2, max_wait_s=0.0, bucket_step=16,
+                   min_bucket=16)
+srv = AutotuneServer(reg, reward_cfg=W1, batcher_cfg=bc, obs=obs, seed=7)
+for i in range(10000):           # runs until the parent SIGKILLs it
+    srv.submit(train[i % len(train)])
+    srv.drain()
+    if i == 10:
+        srv.snapshot("mid-stream")
+    print(f"DONE {i}", flush=True)
+"""
+
+
+def test_sigkill_mid_stream_then_recover_matches_full_replay(tmp_path):
+    root = str(tmp_path / "reg")
+    log = str(tmp_path / "traj.jsonl")
+    child = tmp_path / "child.py"
+    child.write_text(_CHILD)
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+
+    proc = subprocess.Popen([sys.executable, str(child), root, log],
+                            stdout=subprocess.PIPE, text=True, env=env)
+    watchdog = threading.Timer(570.0, proc.kill)
+    watchdog.start()
+    last = -1
+    try:
+        for line in proc.stdout:
+            if line.startswith("DONE"):
+                last = int(line.split()[1])
+                if last >= 30:
+                    proc.kill()              # SIGKILL: no atexit, no flush
+                    break
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait()
+        watchdog.cancel()
+    assert last >= 30, "child died before reaching the kill point"
+
+    # Recover from the mid-stream snapshot (v0002, WAL seq 11) + tail.
+    reg = PolicyRegistry(root)
+    rec = recover_server(reg, log, reward_cfg=W1, batcher_cfg=BCFG,
+                         obs=Observability(registry=MetricsRegistry()),
+                         seed=7)
+    lr = rec.last_recovery
+    assert lr["version"] == "v0002" and lr["snapshot_seq"] == 11
+    assert not lr["healed_current"] and lr["corrupt_versions"] == []
+    assert lr["final_seq"] >= 31             # everything durable replayed
+
+    # Independent check: replay the ENTIRE durable log from the
+    # warm-start snapshot (v0001, before any online update). sync
+    # "always" means every completion the child announced is on disk,
+    # so both paths must land on bit-identical Q/N.
+    base = AutotuneServer(reg.load("v0001"), reward_cfg=W1,
+                          batcher_cfg=BCFG, obs=False, seed=7)
+    replay_wal_tail(base, log, snapshot_seq=0)
+    assert base.update_seq == rec.update_seq == lr["final_seq"]
+    assert np.array_equal(rec.live.qtable.Q, base.live.qtable.Q)
+    assert np.array_equal(rec.live.qtable.N, base.live.qtable.N)

@@ -423,6 +423,13 @@ def test_service_bench_emits_json_report(tmp_path, monkeypatch):
     assert ov["rps_on"] > 0 and ov["rps_off"] > 0
     assert ov["overhead_pct"] == pytest.approx(
         100.0 * (1.0 - ov["rps_on"] / ov["rps_off"]))
+    # Trajectory-log fsync-price arm (DESIGN.md §11.1).
+    ts = report["trajlog_sync"]
+    assert set(ts["rps"]) == {"none", "rotate", "always"}
+    assert all(v > 0 for v in ts["rps"].values())
+    assert ts["fsync_overhead_pct"] == pytest.approx(
+        100.0 * (1.0 - ts["rps"]["always"] / ts["rps"]["none"]))
+    assert any(r.startswith("service/trajlog_sync_b2,") for r in rows)
     # HTTP front-door arm: the same trace fire-and-polled over the wire.
     hf = report["http_front_door"]
     assert hf["max_batch"] == 2
