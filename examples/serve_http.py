@@ -26,7 +26,8 @@ import urllib.request
 
 import numpy as np
 
-from repro.core import GMRESIREnv, TrainConfig, W1, reduced_action_space
+from repro.core import (GMRESIREnv, TrainConfig, W1, executor_compile_count,
+                        reduced_action_space)
 from repro.data import generate_dense_set
 from repro.service import (AutotuneServer, BatcherConfig, OnlineConfig,
                            PolicyRegistry, RolloutConfig, ShadowServer)
@@ -99,9 +100,29 @@ def main():
         reg, version, _ = PolicyRegistry.warm_start(
             os.path.join(root, "reg"), env, W1, TrainConfig(episodes=6))
         # Serve some traffic and snapshot so the baseline's meta carries
-        # the telemetry evidence the rollout gates read.
+        # the telemetry evidence the rollout gates read. The server
+        # AOT-warms its bucket grid in the background (DESIGN.md §12)
+        # and we log progress until every expected bucket is warm.
+        c0 = executor_compile_count()
         seed_srv = AutotuneServer(reg, ir_cfg, W1, bcfg, OnlineConfig(),
-                                  seed=0, obs=False)
+                                  seed=0, obs=False,
+                                  warmup="background",
+                                  warmup_buckets=[16, 32])
+        total = len(seed_srv.warmup_state()["expected_buckets"])
+        last = -1
+        while not seed_srv.warmup.done:
+            st = seed_srv.warmup_state()
+            if len(st["warmed_buckets"]) != last:
+                last = len(st["warmed_buckets"])
+                print(f"  warmup: {last}/{total} buckets warm "
+                      f"({st['elapsed_s']:.1f}s elapsed)")
+            seed_srv.warmup.wait(2.0)
+        st = seed_srv.warmup_state()
+        built = executor_compile_count() - c0
+        print(f"  warmup done: {len(st['warmed_buckets'])}/{total} "
+              f"buckets in {st['elapsed_s']:.1f}s, {built} executables "
+              "built" + ("" if built else
+                         " (grid shared with offline training)"))
         for system in requests(40, seed=3):
             seed_srv.submit(system)
         seed_srv.drain()

@@ -16,6 +16,7 @@ Layered solver-agnostically around the `TunableTask` API:
   * `env.py` — the deprecated `GMRESIREnv` shim (engine + GMRES-IR task
     fused, kept for pre-TunableTask call sites).
 """
+from . import aot
 from .action_space import (ActionSpace, fp8_reduced_action_space,
                            full_action_space, is_monotone,
                            reduced_action_space, reduced_size)
@@ -27,8 +28,10 @@ from .batching import (SolveRecord, bucket_of, pad_to_bucket,
 from .discretize import Discretizer
 from .engine import AutotuneEngine
 from .env import GMRESIREnv
-from .executor import (LocalExecutor, ShardedExecutor, SolveExecutor,
-                       available_executors, default_executor,
+from .executor import (LocalExecutor, LowerableCall, ShardedExecutor,
+                       SolveExecutor, available_executors,
+                       computation_key, default_executor,
+                       executor_compile_count, executor_compile_log,
                        register_executor, resolve_executor,
                        set_default_executor)
 from .policy import PrecisionPolicy
@@ -40,9 +43,10 @@ from .task import (CONVERGED, FAILED, MAXITER, STAGNATED, Outcome,
 __all__ = [
     "ActionSpace", "fp8_reduced_action_space", "full_action_space",
     "is_monotone", "reduced_action_space", "reduced_size",
-    "SolveExecutor", "LocalExecutor", "ShardedExecutor",
+    "SolveExecutor", "LocalExecutor", "LowerableCall", "ShardedExecutor",
     "resolve_executor", "default_executor", "set_default_executor",
-    "register_executor", "available_executors",
+    "register_executor", "available_executors", "aot",
+    "computation_key", "executor_compile_count", "executor_compile_log",
     "TrainConfig", "TrainHistory",
     "as_engine", "evaluate_fixed_action", "evaluate_policy", "train_policy",
     "QTable", "epsilon_schedule", "Discretizer", "AutotuneEngine",

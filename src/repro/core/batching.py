@@ -34,7 +34,7 @@ import numpy as np
 from repro.core.executor import resolve_executor
 from repro.core.task import bucket_of
 from repro.data.matrices import LinearSystem, pad_system
-from repro.solvers.ir import IRConfig, gmres_ir_batch
+from repro.solvers.ir import IRConfig, gmres_ir_batch_lowerable
 
 __all__ = ["SolveRecord", "bucket_of", "pad_to_bucket",
            "records_from_stats", "solve_fixed_batch"]
@@ -96,9 +96,11 @@ def solve_fixed_batch(A_rows: Sequence[np.ndarray],
     bk = resolve_backend(backend)
     A, b, x, acts, k = stack_fixed(list(zip(A_rows, b_rows, x_rows)),
                                    action_rows, ex.preferred_chunk(chunk))
-    stats = ex.dispatch(
-        lambda Ai, bi, xi, ai: gmres_ir_batch(Ai, bi, xi, ai, ir_cfg,
-                                              backend=bk),
-        (A, b, x, acts), A.shape[-1],
-        key=(gmres_ir_batch, ir_cfg, bk))
+    # The solver rides as a `LowerableCall`, which both keys the
+    # dispatcher memo by computation value — every call site with equal
+    # (cfg, backend) shares one executable per shape, across tasks —
+    # and lets AOT warmup precompile the very executable this dispatch
+    # will run (DESIGN.md §12).
+    stats = ex.dispatch(gmres_ir_batch_lowerable(ir_cfg, bk),
+                        (A, b, x, acts), A.shape[-1])
     return records_from_stats(stats, k)

@@ -208,6 +208,23 @@ class AutotuneEngine:
         self.solve_pairs([(i, a) for i in range(len(self.task.instances))
                           for a in range(self.action_space.n_actions)])
 
+    def precompile(self, buckets: Optional[Sequence[int]] = None
+                   ) -> List[Tuple[int, bool]]:
+        """AOT-warm the solve cache's executable grid (DESIGN.md §12):
+        for each bucket, build the executable a `solve_pairs` chunk
+        would otherwise compile on first miss — same chunk policy, same
+        computation key, so this is a no-op on an already-warm engine.
+        Buckets default to the task's instance buckets. Returns
+        (bucket, warmed) pairs; warmed=False means the task has no AOT
+        form and that bucket compiles lazily as before."""
+        fn = getattr(self.task, "precompile_bucket", None)
+        if fn is None:
+            return []
+        if buckets is None:
+            buckets = sorted({self.task.bucket_key(s)
+                              for s in self.task.instances})
+        return [(int(b), bool(fn(int(b), self.chunk))) for b in buckets]
+
     @property
     def cache_size(self) -> int:
         return len(self._cache)

@@ -135,7 +135,10 @@ class ShadowServer:
                  seed: int = 0,
                  executor=None,
                  obs=None,
-                 decision_log_path: Optional[str] = None):
+                 decision_log_path: Optional[str] = None,
+                 warmup: Optional[str] = None,
+                 warmup_buckets: Optional[List[int]] = None,
+                 compile_cache_dir: Optional[str] = None):
         self.registry = registry
         self.rollout_cfg = rollout_cfg
         self.clock = clock
@@ -145,10 +148,16 @@ class ShadowServer:
         self._batcher_cfg = batcher_cfg
         self._online_cfg = online_cfg
         self._executor = executor
+        # AOT warmup / compile-cache wiring (DESIGN.md §12) applies to
+        # the primary only: candidate servers are built in the same
+        # process later, when the executable grid is already warm —
+        # the per-shape caches in `core.executor` are process-wide.
         self.primary = AutotuneServer(
             registry, task=task, reward_cfg=reward_cfg,
             batcher_cfg=batcher_cfg, online_cfg=online_cfg, clock=clock,
-            seed=seed, executor=executor, obs=obs)
+            seed=seed, executor=executor, obs=obs, warmup=warmup,
+            warmup_buckets=warmup_buckets,
+            compile_cache_dir=compile_cache_dir)
         self.candidate: Optional[AutotuneServer] = None
         self.phase = "idle"       # idle|canary|promoted|rolled_back
         self.candidate_version: Optional[str] = None

@@ -39,6 +39,7 @@ from typing import Callable, Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from repro import faults
+from repro.core import aot
 from repro.core.bandit import QTable
 from repro.core.engine import AutotuneEngine
 from repro.core.executor import resolve_executor
@@ -114,7 +115,11 @@ class AutotuneServer:
                  executor=None,
                  obs: Union[None, bool, Observability] = None,
                  auto_step: bool = True,
-                 breaker_cfg: BreakerConfig = BreakerConfig()):
+                 breaker_cfg: BreakerConfig = BreakerConfig(),
+                 warmup: Optional[str] = None,
+                 warmup_buckets: Optional[List[int]] = None,
+                 compile_cache_dir: Optional[str] = None,
+                 warmup_pace: Optional[Callable] = None):
         if isinstance(registry, PolicyRegistry):
             self.registry: Optional[PolicyRegistry] = registry
             snapshot = registry.load()
@@ -205,6 +210,36 @@ class AutotuneServer:
         # Optional subscriber, called with each SolveResponse in completion
         # order (the order Q-updates were applied) — push-style consumers.
         self.on_response: Optional[Callable[[SolveResponse], None]] = None
+        # Compile-cliff controls (DESIGN.md §12): persistent compile
+        # cache (env-driven; no-op when neither the kwarg nor
+        # REPRO_COMPILE_CACHE_DIR is set) + optional AOT warmup of the
+        # executable grid. `warm_buckets` feeds the readiness gate — a
+        # bucket is warm once it has either flushed a live batch or
+        # been AOT-precompiled; with a warmup grid configured, /readyz
+        # holds at 503 until the whole expected grid is warm.
+        aot.enable_persistent_cache(compile_cache_dir)
+        self.warm_buckets: set = set()
+        self.warm_order: List[int] = []
+        self.warmup = None
+        self._warmup_mode = warmup
+        self._warmup_expected: frozenset = frozenset()
+        if warmup is not None:
+            if warmup not in ("sync", "background"):
+                raise ValueError("warmup must be None, 'sync' or "
+                                 f"'background', got {warmup!r}")
+            trajlog = getattr(self.obs, "trajlog", None)
+            entries = aot.plan(
+                [self.task], self._warmup_bucket_list(warmup_buckets),
+                batcher_cfg.max_batch,
+                trajectory_path=getattr(trajlog, "path", None))
+            self._warmup_expected = frozenset(e.bucket for e in entries)
+            if warmup == "sync":
+                self.warmup = aot.precompile(entries,
+                                             on_entry=self._on_warm)
+            else:
+                self.warmup = aot.BackgroundWarmup(
+                    entries, on_entry=self._on_warm,
+                    pace=warmup_pace).start()
 
     # -- request path ------------------------------------------------------
     def select_action(self, features) -> Tuple[int, int, float, bool]:
@@ -374,19 +409,65 @@ class AutotuneServer:
             self.on_response(resp)
         return resp
 
+    # -- AOT warmup (DESIGN.md §12) ----------------------------------------
+    def _warmup_bucket_list(self, warmup_buckets) -> List[int]:
+        """Bucket keys the warmup grid covers: explicit expected request
+        sizes (normalized through the task's bucketing, so callers may
+        pass either raw n's or bucket keys), else the buckets of the
+        task's own instances, else the minimum bucket."""
+        from repro.core.task import bucket_of
+        step = getattr(self.task, "bucket_step",
+                       self.batcher.cfg.bucket_step)
+        lo = getattr(self.task, "min_bucket", self.batcher.cfg.min_bucket)
+        if warmup_buckets:
+            return sorted({bucket_of(int(n), step, lo)
+                           for n in warmup_buckets})
+        instances = getattr(self.task, "instances", ())
+        if instances:
+            return sorted({self.task.bucket_key(s) for s in instances})
+        return [int(lo)]
+
+    def _on_warm(self, entry, warmed: bool) -> None:
+        # warmed=False still flips the gate: the task has no AOT form
+        # for that cell, so holding /readyz on it would never resolve —
+        # the bucket compiles on first hit exactly as it always did.
+        self.warm_buckets.add(int(entry.bucket))
+        self.warm_order.append(int(entry.bucket))
+
+    def warmup_state(self) -> Optional[dict]:
+        """Per-bucket AOT warmup progress, surfaced through `/readyz`
+        and `/healthz` (None when no warmup was configured)."""
+        if self._warmup_mode is None:
+            return None
+        rep = getattr(self.warmup, "report", self.warmup)
+        return {"mode": self._warmup_mode,
+                "expected_buckets": sorted(self._warmup_expected),
+                "warmed_buckets": sorted(self.warm_buckets),
+                "pending_buckets": sorted(self._warmup_expected
+                                          - self.warm_buckets),
+                "done": bool(rep.done),
+                "elapsed_s": round(float(rep.seconds), 3),
+                "errors": list(rep.errors),
+                "compile_cache": aot.cache_stats()}
+
     # -- observability front door ------------------------------------------
     @property
     def ready(self) -> bool:
         """Readiness (the `/readyz` gate): a policy snapshot is loaded
-        and the bucket grid is warm — every bucket that has received
-        traffic has flushed (= compiled) at least one micro-batch, and
-        at least one batch has run. A server that has not solved
-        anything yet would serve its first requests through an XLA
-        compile, so it reports unready until warmed."""
+        and the bucket grid is warm. A bucket counts as warm once it
+        has flushed (= compiled) at least one live micro-batch OR been
+        AOT-precompiled (DESIGN.md §12). With a warmup grid configured
+        the whole expected grid must be warm — the background sweep
+        flips this per bucket; without one the legacy rule holds: at
+        least one batch has run and no traffic-seen bucket is cold. A
+        server that reports ready will not serve a request through an
+        XLA compile."""
         if self.live is None:
             return False
-        warmed = set(self.telemetry.batches_per_bucket)
+        warmed = set(self.telemetry.batches_per_bucket) | self.warm_buckets
         seen = set(self.telemetry.requests_per_bucket)
+        if self._warmup_expected:
+            return self._warmup_expected <= warmed and seen <= warmed
         return bool(warmed) and seen <= warmed
 
     def degradation_state(self) -> dict:
@@ -404,6 +485,9 @@ class AutotuneServer:
         }
         if self.last_recovery is not None:
             out["last_recovery"] = dict(self.last_recovery)
+        warmup = self.warmup_state()
+        if warmup is not None:
+            out["warmup"] = warmup
         return out
 
     def serve_obs(self, host: str = "127.0.0.1", port: int = 0):

@@ -236,6 +236,23 @@ def cg_ir_batch(A, b, x_true, actions, cfg: CGConfig = CGConfig(),
     return _cg_ir_batch_jit(A, b, x_true, actions, cfg, bk)
 
 
+def cg_ir_batch_lowerable(cfg: CGConfig = CGConfig(), backend=None):
+    """`cg_ir_batch` in `core.executor.LowerableCall` form — same eager
+    coercion, same jitted entry point, AOT-compilable and value-keyed
+    for cross-task executable dedupe (DESIGN.md §12)."""
+    from repro.core.executor import LowerableCall
+    bk = resolve_backend(backend)
+
+    def prepare(A, b, x_true, actions):
+        A, b, x_true = bk.coerce(jnp.asarray(A), jnp.asarray(b),
+                                 jnp.asarray(x_true))
+        return A, b, x_true, jnp.asarray(actions)
+
+    return LowerableCall(_cg_ir_batch_jit,
+                         (("cfg", cfg), ("backend", bk)), prepare)
+
+
 # Re-exported status codes (shared convention with ir.py / core.task).
 __all__ = ["CGConfig", "CGStats", "PCGResult", "pcg", "cg_ir",
-           "cg_ir_batch", "CONVERGED", "STAGNATED", "MAXITER", "FAILED"]
+           "cg_ir_batch", "cg_ir_batch_lowerable",
+           "CONVERGED", "STAGNATED", "MAXITER", "FAILED"]

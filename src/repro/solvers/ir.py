@@ -178,3 +178,22 @@ def gmres_ir_batch(A, b, x_true, actions, cfg: IRConfig = IRConfig(),
     A, b, x_true = bk.coerce(jnp.asarray(A), jnp.asarray(b),
                              jnp.asarray(x_true))
     return _gmres_ir_batch_jit(A, b, x_true, actions, cfg, bk)
+
+
+def gmres_ir_batch_lowerable(cfg: IRConfig = IRConfig(), backend=None):
+    """`gmres_ir_batch` in `core.executor.LowerableCall` form: the same
+    eager carrier coercion (`prepare`) around the same module-level
+    jitted entry point, but AOT-compilable — `lower().compile()` per
+    shape — and value-keyed by (entry point, cfg, backend), so every
+    task and call site running this program shares one executable per
+    shape (DESIGN.md §12)."""
+    from repro.core.executor import LowerableCall
+    bk = resolve_backend(backend)
+
+    def prepare(A, b, x_true, actions):
+        A, b, x_true = bk.coerce(jnp.asarray(A), jnp.asarray(b),
+                                 jnp.asarray(x_true))
+        return A, b, x_true, jnp.asarray(actions)
+
+    return LowerableCall(_gmres_ir_batch_jit,
+                         (("cfg", cfg), ("backend", bk)), prepare)

@@ -137,6 +137,39 @@ class LinearSystemTask:
     def solve_rows(self, rows, action_rows, chunk: int) -> List[Outcome]:
         raise NotImplementedError
 
+    # -- AOT warmup (DESIGN.md §12) ----------------------------------------
+    def lowerable_for(self, n_pad: int):
+        """The batched solver as a `core.executor.LowerableCall` for one
+        padded size, or None when the task has no AOT form (warmup then
+        falls back to first-hit compilation, exactly as before)."""
+        return None
+
+    def warm_rows(self, bucket: int):
+        """One representative prepared row for `bucket`: an identity
+        system with the exact shapes/dtypes of any live padded row
+        (`data.matrices.pad_system` pads with the identity, so this is
+        literally a member of the live input family)."""
+        n = int(bucket)
+        return (np.eye(n), np.ones(n), np.ones(n))
+
+    def precompile_bucket(self, bucket: int, chunk: int) -> bool:
+        """AOT-build this task's executable for (bucket, chunk) without
+        solving anything (DESIGN.md §12). The warm batch is shaped
+        exactly like a live flush — `stack_fixed` to the executor's
+        preferred chunk, int32 action rows — so the first real request
+        hits the compiled executable. Returns False when the task has
+        no AOT form."""
+        low = self.lowerable_for(int(bucket))
+        if low is None or self.action_space is None:
+            return False
+        row = self.warm_rows(int(bucket))
+        action = np.asarray(self.action_space.actions[0], np.int32)
+        A, b, x, acts, _ = stack_fixed(
+            [row], [action],
+            self.executor.preferred_chunk(int(chunk), int(bucket)))
+        return bool(self.executor.precompile(low, (A, b, x, acts),
+                                             A.shape[-1]))
+
     def reward(self, outcome: Outcome, action_idx: int,
                instance: LinearSystem, cfg) -> float:
         """Eq. 21 on the outcome's metrics; the inner-iteration count

@@ -20,7 +20,7 @@ import numpy as np
 from repro.core.action_space import ActionSpace
 from repro.core.task import Outcome
 from repro.data.matrices import LinearSystem
-from repro.solvers.cg import CGConfig, cg_ir_batch
+from repro.solvers.cg import CGConfig, cg_ir_batch_lowerable
 from repro.tasks.base import LinearSystemTask, stack_fixed
 
 
@@ -43,11 +43,12 @@ class CGIRTask(LinearSystemTask):
         A, b, x, acts, k = stack_fixed(rows, action_rows,
                                        self.executor.preferred_chunk(chunk))
         cfg = self.solver_cfg_for(self.cg_cfg, A.shape[-1])
+        # Value-keyed lowerable: dedupes the executable with any other
+        # call site (or task) running the same (cfg, backend) program
+        # and gives AOT warmup its precompile target (DESIGN.md §12).
         stats = self.executor.dispatch(
-            lambda Ai, bi, xi, ai: cg_ir_batch(Ai, bi, xi, ai, cfg,
-                                               backend=self.backend),
-            (A, b, x, acts), A.shape[-1],
-            key=(cg_ir_batch, cfg, self.backend))
+            cg_ir_batch_lowerable(cfg, self.backend),
+            (A, b, x, acts), A.shape[-1])
         # One host transfer for the whole stats tuple (DESIGN.md §7).
         ferr, nbe, n_outer, n_cg, status, res = (
             np.asarray(f) for f in jax.device_get(tuple(stats)))
@@ -58,3 +59,9 @@ class CGIRTask(LinearSystemTask):
                                  "n_cg": int(n_cg[j]),
                                  "res_norm": float(res[j])})
                 for j in range(k)]
+
+    def lowerable_for(self, n_pad: int):
+        """AOT form (DESIGN.md §12): same (cfg, backend)-keyed lowerable
+        as `solve_rows`, so warmup and live traffic share executables."""
+        return cg_ir_batch_lowerable(
+            self.solver_cfg_for(self.cg_cfg, int(n_pad)), self.backend)

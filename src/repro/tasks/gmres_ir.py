@@ -22,7 +22,7 @@ from repro.core.action_space import ActionSpace
 from repro.core.batching import SolveRecord, solve_fixed_batch
 from repro.core.task import Outcome
 from repro.data.matrices import LinearSystem
-from repro.solvers.ir import IRConfig
+from repro.solvers.ir import IRConfig, gmres_ir_batch_lowerable
 from repro.tasks.base import LinearSystemTask
 
 
@@ -57,3 +57,10 @@ class GMRESIRTask(LinearSystemTask):
                                  cfg, chunk, backend=self.backend,
                                  executor=self.executor)
         return [outcome_of_record(r) for r in recs]
+
+    def lowerable_for(self, n_pad: int):
+        """AOT form (DESIGN.md §12): the same (cfg, backend)-keyed
+        lowerable `solve_rows` dispatches through, so warmup builds the
+        very executable live traffic will run."""
+        return gmres_ir_batch_lowerable(
+            self.solver_cfg_for(self.ir_cfg, int(n_pad)), self.backend)

@@ -291,18 +291,16 @@ print("PARITY_ENGINE_OK")
 
 # --- recompile accounting: one executable per bucket ----------------------
 from repro.core.executor import batch_callable
-from repro.solvers.ir import gmres_ir_batch
-from repro.precision import resolve_backend
-ex8 = ShardedExecutor(data=8)
-wrapped = batch_callable(ex8, (gmres_ir_batch, IR, resolve_backend(None)),
-                         None)
+from repro.solvers import gmres_ir_batch_lowerable
+wrapped = batch_callable(ShardedExecutor(data=8), None,
+                         gmres_ir_batch_lowerable(IR))
 # One bucket, full action sweep already ran through this wrapper above:
-# exactly one compiled executable.
-assert wrapped._jit._cache_size() == 1, wrapped._jit._cache_size()
-# An equal-valued executor reuses the same wrapper (no new compile).
-assert batch_callable(ShardedExecutor(data=8),
-                      (gmres_ir_batch, IR, resolve_backend(None)),
-                      None) is wrapped
+# exactly one AOT-compiled executable in the per-shape cache.
+assert len(wrapped.executables) == 1, sorted(wrapped.executables)
+# An equal-valued executor + equal-valued lowerable reuse the same
+# wrapper (computation_key collapses them — no new compile).
+assert batch_callable(ShardedExecutor(data=8), None,
+                      gmres_ir_batch_lowerable(IR)) is wrapped
 print("PARITY_COMPILE_OK")
 
 # --- service e2e through the sharded path ---------------------------------
